@@ -1,0 +1,26 @@
+"""Paper Fig. 9: per-epoch carbon under sinusoidal vs flat arrivals, 8 DCs."""
+from __future__ import annotations
+
+import numpy as np
+
+from repro.core.schedulers import compare_techniques
+
+from .common import HOURS, Timer, build_envs, emit
+
+TECHS = ("fd", "nash", "ppo", "gt-drl")  # the paper's highlighted curves
+
+
+def run(rows) -> dict:
+    out = {}
+    for pattern in ("sinusoidal", "flat"):
+        envs = build_envs(8, runs=2, pattern=pattern)
+        with Timer() as t:
+            res = compare_techniques(envs, TECHS, "carbon", hours=HOURS)
+        for tech in TECHS:
+            curve = np.asarray(res[tech]["curve_mean"])
+            peak_epoch = int(np.argmax(curve))
+            emit(rows, f"arrival_{pattern}/{tech}", t.seconds / len(TECHS),
+                 f"day_kg={res[tech]['mean']:.1f};peak_epoch={peak_epoch};"
+                 f"peak_kg={curve.max():.1f}")
+        out[pattern] = res
+    return out

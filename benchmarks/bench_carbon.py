@@ -1,0 +1,19 @@
+"""Paper Fig. 7: cloud carbon emissions per technique, 4 DCs, sinusoidal."""
+from __future__ import annotations
+
+from repro.core.schedulers import compare_techniques
+
+from .common import HOURS, RUNS, TECHNIQUES, Timer, build_envs, emit
+
+
+def run(rows) -> dict:
+    envs = build_envs(4)
+    with Timer() as t:
+        res = compare_techniques(envs, TECHNIQUES, "carbon", hours=HOURS)
+    gt = res["gt-drl"]["mean"]
+    for tech in TECHNIQUES:
+        m, se = res[tech]["mean"], res[tech]["stderr"]
+        red = 100.0 * (m - gt) / m if tech != "gt-drl" else 0.0
+        emit(rows, f"carbon_4dc/{tech}", t.seconds / len(TECHNIQUES),
+             f"day_kg={m:.1f};stderr={se:.1f};gtdrl_reduction_pct={red:.1f}")
+    return res

@@ -1,0 +1,29 @@
+"""Paper Fig. 11: cloud operating costs (energy + peak + network), 4/8/16 DCs."""
+from __future__ import annotations
+
+import numpy as np
+
+from repro.core.schedulers import compare_techniques
+
+from .common import HOURS, QUICK, TECHNIQUES, Timer, build_envs, emit
+
+
+def run(rows) -> dict:
+    out = {}
+    sizes = (4,) if QUICK else (4, 8, 16)
+    for nd in sizes:
+        envs = build_envs(nd, runs=2)
+        with Timer() as t:
+            res = compare_techniques(envs, TECHNIQUES, "cost", hours=HOURS)
+        gt = res["gt-drl"]["mean"]
+        for tech in TECHNIQUES:
+            m = res[tech]["mean"]
+            red = 100.0 * (m - gt) / m if tech != "gt-drl" else 0.0
+            emit(rows, f"cost_{nd}dc/{tech}", t.seconds / len(TECHNIQUES),
+                 f"day_usd={m:.0f};gtdrl_reduction_pct={red:.1f}")
+        # first-epoch peak-demand spike (paper: first day of billing month)
+        curve = np.asarray(res["gt-drl"]["curve_mean"])
+        emit(rows, f"cost_{nd}dc/first_epoch_share", 0.0,
+             f"share={float(curve[0] / max(curve.sum(), 1e-9)):.3f}")
+        out[nd] = res
+    return out

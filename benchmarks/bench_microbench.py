@@ -1,0 +1,71 @@
+"""Wall-clock micro-benchmarks of the substrate primitives on this host.
+
+Not a paper figure — these are the us_per_call numbers the harness format
+asks for: solver latencies (the paper's "DRL runs in seconds" claim) and
+model-step throughputs for the smoke configs.
+"""
+from __future__ import annotations
+
+import functools
+import time
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs import get_config
+from repro.core import gt_drl, nash
+from repro.core.game import GameContext
+from repro.core.ppo import PPOConfig
+from repro.data.tokens import TokenPipeline
+from repro.dcsim import env as E
+from repro.optim.adamw import AdamWConfig
+from repro.train.step import init_train_state, train_step
+
+from .common import Timer, emit
+
+
+def _time(fn, n=5):
+    fn()  # compile
+    t0 = time.time()
+    for _ in range(n):
+        r = fn()
+    jax.tree_util.tree_map(
+        lambda x: x.block_until_ready() if hasattr(x, "block_until_ready") else x, r)
+    return (time.time() - t0) / n
+
+
+def run(rows) -> dict:
+    env = E.build_env(4, seed=0)
+    peak = jnp.zeros((4,))
+    ctx = GameContext(env=env, tau=jnp.int32(12), objective="carbon")
+
+    # NASH epoch solve latency (paper: math methods get up to 1h; ours: ms)
+    nash_fn = jax.jit(functools.partial(nash.solve_epoch, cfg=nash.NashConfig()))
+    s = _time(lambda: nash_fn(None, ctx, peak))
+    emit(rows, "micro/nash_epoch_solve", s, f"per_epoch_s={s:.3f}")
+
+    # GT-DRL epoch solve latency (paper §6: "runs in a few seconds")
+    cfg = gt_drl.GTDRLConfig()
+    agents = gt_drl.init_agents(jax.random.PRNGKey(0), env, cfg)
+    gt_fn = jax.jit(lambda k, a, c, p: gt_drl.solve_epoch(k, a, c, p, cfg))
+    key = jax.random.PRNGKey(1)
+    s = _time(lambda: gt_fn(key, agents, ctx, peak), n=3)
+    emit(rows, "micro/gtdrl_epoch_solve", s, f"per_epoch_s={s:.3f}")
+
+    # smoke-model train step throughput
+    mcfg = get_config("llama3.2-1b").smoke()
+    ocfg = AdamWConfig(lr=1e-3)
+    state = init_train_state(jax.random.PRNGKey(0), mcfg, ocfg)
+    pipe = TokenPipeline(mcfg, seed=0, batch=8, seq=256)
+    step = jax.jit(functools.partial(train_step, cfg=mcfg, opt_cfg=ocfg))
+    batch = pipe.next()
+    state, _ = step(state, batch)  # compile
+    t0 = time.time()
+    n = 10
+    for _ in range(n):
+        state, m = step(state, batch)
+    jax.block_until_ready(m["loss"])
+    dt = (time.time() - t0) / n
+    toks = 8 * 256 / dt
+    emit(rows, "micro/train_step_smoke", dt, f"tokens_per_s={toks:.0f}")
+    return {}

@@ -1,0 +1,30 @@
+"""Paper Fig. 10: carbon vs renewable availability over 12 months, 8 DCs."""
+from __future__ import annotations
+
+import numpy as np
+
+from repro.core.schedulers import compare_techniques
+
+from .common import HOURS, QUICK, Timer, build_envs, emit
+
+TECHS = ("nash", "ppo", "gt-drl")  # Fig. 10(b) fine-scale comparison
+
+
+def run(rows) -> dict:
+    months = (1, 4, 6, 10) if QUICK else tuple(range(1, 13))
+    out = {}
+    for month in months:
+        envs = build_envs(8, runs=1, month=month)
+        with Timer() as t:
+            res = compare_techniques(envs, TECHS, "carbon", hours=HOURS)
+        rp_total = float(np.asarray(envs[0].rp).sum())
+        for tech in TECHS:
+            emit(rows, f"renewables_m{month:02d}/{tech}", t.seconds / len(TECHS),
+                 f"day_kg={res[tech]['mean']:.1f};renewable_wh={rp_total:.3e}")
+        out[month] = {"res": res, "rp": rp_total}
+    # paper claim: emissions fall as renewables rise (GT-DRL curve)
+    rps = np.asarray([out[m]["rp"] for m in months])
+    ems = np.asarray([out[m]["res"]["gt-drl"]["mean"] for m in months])
+    corr = float(np.corrcoef(rps, ems)[0, 1])
+    emit(rows, "renewables_corr/gt-drl", 0.0, f"corr_rp_vs_carbon={corr:.3f}")
+    return out

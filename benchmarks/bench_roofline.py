@@ -1,0 +1,36 @@
+"""Roofline table (deliverable g): reads the dry-run artifacts and prints
+per-(arch × shape) terms + bottleneck + useful-compute ratio."""
+from __future__ import annotations
+
+import glob
+import json
+import os
+
+from .common import emit
+
+
+def run(rows, dryrun_dir: str = "experiments/dryrun") -> dict:
+    out = {}
+    files = sorted(glob.glob(os.path.join(dryrun_dir, "*__16x16.json")))
+    if not files:
+        emit(rows, "roofline/missing", 0.0,
+             "run `python -m repro.launch.dryrun --all` first")
+        return out
+    for f in files:
+        r = json.load(open(f))
+        tag = f"{r['arch']}/{r['shape']}"
+        if r.get("status") == "SKIP":
+            emit(rows, f"roofline/{tag}", 0.0, "SKIP:" + r.get("reason", "")[:60])
+            continue
+        if r.get("status") != "OK":
+            emit(rows, f"roofline/{tag}", 0.0, "FAIL")
+            continue
+        dom = max(r["compute_s"], r["memory_s"], r["collective_s"])
+        frac = r["compute_s"] / dom if dom > 0 else 0.0
+        emit(rows, f"roofline/{tag}", r.get("compile_s", 0) * 1e6 / 1e6,
+             f"compute_s={r['compute_s']:.4g};memory_s={r['memory_s']:.4g};"
+             f"collective_s={r['collective_s']:.4g};bottleneck={r['bottleneck']};"
+             f"roofline_frac={frac:.3f};useful={r['useful_ratio']:.3f};"
+             f"mem_gb={r['memory_per_device_gb']:.2f}")
+        out[tag] = r
+    return out

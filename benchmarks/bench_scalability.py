@@ -1,0 +1,28 @@
+"""Paper Fig. 8: % carbon reduction of GT-DRL vs each technique, 4/8/16 DCs."""
+from __future__ import annotations
+
+from repro.core.schedulers import compare_techniques
+
+from .common import HOURS, TECHNIQUES, Timer, build_envs, emit
+
+
+def run(rows, carbon_4dc=None) -> dict:
+    out = {}
+    for nd in (4, 8, 16):
+        if nd == 4 and carbon_4dc is not None:
+            res = carbon_4dc  # reuse Fig. 7's runs
+            secs = 0.0
+        else:
+            envs = build_envs(nd, runs=2)
+            with Timer() as t:
+                res = compare_techniques(envs, TECHNIQUES, "carbon", hours=HOURS)
+            secs = t.seconds
+        gt = res["gt-drl"]["mean"]
+        for tech in TECHNIQUES:
+            if tech == "gt-drl":
+                continue
+            red = 100.0 * (res[tech]["mean"] - gt) / res[tech]["mean"]
+            emit(rows, f"scalability_{nd}dc/{tech}", secs / max(len(TECHNIQUES), 1),
+                 f"gtdrl_carbon_reduction_pct={red:.2f}")
+        out[nd] = res
+    return out

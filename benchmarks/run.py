@@ -1,0 +1,55 @@
+"""Benchmark harness: one benchmark per paper table/figure + roofline.
+
+Prints ``name,us_per_call,derived`` CSV rows (and tees a summary). Set
+REPRO_BENCH_QUICK=1 for a fast smoke pass.
+
+    PYTHONPATH=src python -m benchmarks.run [--only carbon,costs,...]
+"""
+from __future__ import annotations
+
+import argparse
+import sys
+import time
+
+ALL = ("carbon", "scalability", "arrival", "renewables", "costs", "roofline", "micro")
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--only", default=None,
+                    help="comma-separated subset of: " + ",".join(ALL))
+    args = ap.parse_args()
+    which = tuple(args.only.split(",")) if args.only else ALL
+
+    rows = ["name,us_per_call,derived"]
+    print(rows[0], flush=True)
+    t0 = time.time()
+
+    carbon_res = None
+    if "carbon" in which:
+        from . import bench_carbon
+        carbon_res = bench_carbon.run(rows)
+    if "scalability" in which:
+        from . import bench_scalability
+        bench_scalability.run(rows, carbon_4dc=carbon_res)
+    if "arrival" in which:
+        from . import bench_arrival
+        bench_arrival.run(rows)
+    if "renewables" in which:
+        from . import bench_renewables
+        bench_renewables.run(rows)
+    if "costs" in which:
+        from . import bench_costs
+        bench_costs.run(rows)
+    if "roofline" in which:
+        from . import bench_roofline
+        bench_roofline.run(rows)
+    if "micro" in which:
+        from . import bench_microbench
+        bench_microbench.run(rows)
+
+    print(f"# total benchmark wall time: {time.time() - t0:.0f}s", flush=True)
+
+
+if __name__ == "__main__":
+    main()

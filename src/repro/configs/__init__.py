@@ -1,0 +1,117 @@
+"""Architecture registry + ShapeDtypeStruct input specs for the dry-run.
+
+``input_specs(cfg, shape)`` returns (step_kind, kwargs-of-ShapeDtypeStruct)
+for the step function the cell lowers: ``train_step`` / ``prefill_step`` for
+train/prefill kinds, ``decode_step`` (one token + full cache pytree specs)
+for decode kinds. Nothing here allocates device memory — cache/param shapes
+come from ``jax.eval_shape``.
+"""
+from __future__ import annotations
+
+import importlib
+from typing import Any, Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from .base import ATTN, MLSTM, RECUR, SLSTM, SHAPES, ModelConfig, ShapeConfig, shape_applicable
+
+_ARCH_MODULES = {
+    "whisper-base": "whisper_base",
+    "qwen2-7b": "qwen2_7b",
+    "mistral-large-123b": "mistral_large_123b",
+    "llama3.2-1b": "llama3_2_1b",
+    "llama3.2-3b": "llama3_2_3b",
+    "xlstm-125m": "xlstm_125m",
+    "arctic-480b": "arctic_480b",
+    "qwen2-moe-a2.7b": "qwen2_moe_a2_7b",
+    "qwen2-vl-72b": "qwen2_vl_72b",
+    "recurrentgemma-9b": "recurrentgemma_9b",
+}
+
+ARCHS = tuple(_ARCH_MODULES)
+
+
+def get_config(name: str) -> ModelConfig:
+    if name not in _ARCH_MODULES:
+        raise KeyError(f"unknown arch {name!r}; known: {sorted(_ARCH_MODULES)}")
+    mod = importlib.import_module(f".{_ARCH_MODULES[name]}", __package__)
+    return mod.CONFIG
+
+
+def _f(shape, dtype=jnp.bfloat16):
+    return jax.ShapeDtypeStruct(shape, dtype)
+
+
+def _i(shape):
+    return jax.ShapeDtypeStruct(shape, jnp.int32)
+
+
+VISION_TOKENS = 1024  # stub patch-embedding span for the vlm family
+
+
+def batch_specs(cfg: ModelConfig, b: int, s: int, with_labels: bool) -> Dict[str, Any]:
+    """Model-input specs for a full-sequence (train / prefill) pass."""
+    specs: Dict[str, Any] = {"tokens": _i((b, s))}
+    if with_labels:
+        specs["labels"] = _i((b, s))
+    if cfg.is_encoder_decoder:
+        specs["frames"] = _f((b, cfg.encoder_seq, cfg.d_model))
+    if cfg.rope_mode == "mrope":
+        specs["positions"] = _i((b, s, 3))
+    if cfg.frontend == "vision_stub":
+        specs["vision_embeds"] = _f((b, min(VISION_TOKENS, s), cfg.d_model))
+    return specs
+
+
+def cache_specs(cfg: ModelConfig, b: int, cache_len: int):
+    """Decode-cache specs without allocating (eval_shape)."""
+    from ..models import model as model_lib
+    from ..models import transformer
+
+    if cfg.is_encoder_decoder:
+        def make():
+            params = model_lib.init(jax.random.PRNGKey(0), cfg)
+            enc_out = jnp.zeros((b, cfg.encoder_seq, cfg.d_model),
+                                {"bfloat16": jnp.bfloat16, "float32": jnp.float32}[cfg.dtype])
+            return model_lib.init_cache(params, cfg, b, cache_len, enc_out=enc_out)
+
+        return jax.eval_shape(make)
+    return jax.eval_shape(lambda: transformer.init_cache(cfg, b, cache_len))
+
+
+def input_specs(cfg: ModelConfig, shape: ShapeConfig) -> Tuple[str, Dict[str, Any]]:
+    """(step_kind, specs) for one (arch × shape) cell."""
+    ok, why = shape_applicable(cfg, shape)
+    if not ok:
+        raise ValueError(f"{cfg.name} × {shape.name} skipped: {why}")
+    b, s = shape.global_batch, shape.seq_len
+    if shape.kind == "train":
+        return "train", {"batch": batch_specs(cfg, b, s, with_labels=True)}
+    if shape.kind == "prefill":
+        return "prefill", {"batch": batch_specs(cfg, b, s, with_labels=False)}
+    # decode: one token against a cache of seq_len positions
+    specs: Dict[str, Any] = {
+        "token": _i((b, 1)),
+        "positions": _i((b, 1, 3)) if cfg.rope_mode == "mrope" else _i((b, 1)),
+        "cache": cache_specs(cfg, b, s),
+    }
+    return "decode", specs
+
+
+def param_specs_struct(cfg: ModelConfig):
+    """Parameter ShapeDtypeStructs via eval_shape (no allocation)."""
+    from ..models import model as model_lib
+
+    return jax.eval_shape(lambda: model_lib.init(jax.random.PRNGKey(0), cfg))
+
+
+def all_cells():
+    """Every (arch, shape) cell with its applicability."""
+    out = []
+    for a in ARCHS:
+        cfg = get_config(a)
+        for sname, shp in SHAPES.items():
+            ok, why = shape_applicable(cfg, shp)
+            out.append((a, sname, ok, why))
+    return out

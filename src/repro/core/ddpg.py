@@ -1,0 +1,149 @@
+"""DDPG baseline (comparison technique (d), adapted from [32]).
+
+Joint control: one actor maps the full flattened strategy (|I|·|D|) to new
+logits for every player at once; the critic is Q(s, a). Off-policy with a
+ring replay buffer, Gaussian exploration, soft target updates. The paper
+finds DDPG's exploration ill-suited to this objective landscape — we keep
+the implementation standard so that finding reproduces honestly.
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Any, Dict, NamedTuple, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from ..dcsim import env as E
+from ..optim.adamw import AdamWConfig, adamw_init, adamw_update
+from . import networks as nets
+from .game import GameContext, SolveResult, cloud_objective, uniform_fractions
+
+
+@dataclasses.dataclass(frozen=True)
+class DDPGConfig:
+    steps: int = 200            # environment interactions per epoch solve
+    batch: int = 64
+    buffer: int = 512
+    gamma: float = 0.9
+    tau_soft: float = 0.02
+    act_noise: float = 0.3
+    lr: float = 1e-3
+    hidden: Tuple[int, ...] = (64, 64)
+    warmup: int = 32
+
+
+class DDPGState(NamedTuple):
+    actor: Any
+    critic: Any
+    target_actor: Any
+    target_critic: Any
+    actor_opt: Any
+    critic_opt: Any
+    buf_s: jnp.ndarray
+    buf_a: jnp.ndarray
+    buf_r: jnp.ndarray
+    buf_s2: jnp.ndarray
+    buf_n: jnp.ndarray  # filled count
+
+
+def _q_init(key, sdim, adim, hidden):
+    return nets.mlp_init(key, (sdim + adim, *hidden, 1), out_scale=1.0)
+
+
+def _q(params, s, a):
+    return nets.mlp_apply(params, jnp.concatenate([s, a], axis=-1))[..., 0]
+
+
+def ddpg_init(key, ctx: GameContext, cfg: DDPGConfig) -> DDPGState:
+    i_n, d = ctx.num_players(), ctx.num_dcs()
+    sdim = adim = i_n * d
+    k1, k2 = jax.random.split(key)
+    actor = nets.mlp_init(k1, (sdim, *cfg.hidden, adim))
+    critic = _q_init(k2, sdim, adim, cfg.hidden)
+    oc = AdamWConfig(lr=cfg.lr, weight_decay=0.0)
+    z = jnp.zeros
+    return DDPGState(
+        actor, critic, actor, critic,
+        adamw_init(actor, oc), adamw_init(critic, oc),
+        z((cfg.buffer, sdim)), z((cfg.buffer, adim)), z((cfg.buffer,)),
+        z((cfg.buffer, sdim)), jnp.zeros((), jnp.int32),
+    )
+
+
+def _fractions(logits_flat: jnp.ndarray, i_n: int, d: int) -> jnp.ndarray:
+    return jax.nn.softmax(logits_flat.reshape(i_n, d), axis=-1)
+
+
+def solve_epoch(key, ctx: GameContext, peak_state: jnp.ndarray,
+                cfg: DDPGConfig = DDPGConfig()) -> SolveResult:
+    i_n, d = ctx.num_players(), ctx.num_dcs()
+    sdim = adim = i_n * d
+    state = ddpg_init(key, ctx, cfg)
+    oc = AdamWConfig(lr=cfg.lr, weight_decay=0.0)
+
+    f0 = uniform_fractions(ctx)
+    scale = jnp.abs(cloud_objective(ctx, f0, peak_state)) + 1e-6
+
+    def reward(logits_flat):
+        return -cloud_objective(ctx, _fractions(logits_flat, i_n, d), peak_state) / scale
+
+    def env_step(s, a):
+        r = reward(a)
+        s2 = _fractions(a, i_n, d).reshape(-1)
+        return r, s2
+
+    def td_update(st: DDPGState, batch_idx):
+        s, a = st.buf_s[batch_idx], st.buf_a[batch_idx]
+        r, s2 = st.buf_r[batch_idx], st.buf_s2[batch_idx]
+        a2 = jax.vmap(lambda x: nets.mlp_apply(st.target_actor, x))(s2)
+        q_tgt = r + cfg.gamma * jax.vmap(lambda x, y: _q(st.target_critic, x, y))(s2, a2)
+
+        def c_loss(c):
+            q = jax.vmap(lambda x, y: _q(c, x, y))(s, a)
+            return jnp.mean((q - q_tgt) ** 2)
+
+        _, gc = jax.value_and_grad(c_loss)(st.critic)
+        critic, copt, _ = adamw_update(gc, st.critic_opt, st.critic, oc)
+
+        def a_loss(actor):
+            acts = jax.vmap(lambda x: nets.mlp_apply(actor, x))(s)
+            return -jnp.mean(jax.vmap(lambda x, y: _q(critic, x, y))(s, acts))
+
+        _, ga = jax.value_and_grad(a_loss)(st.actor)
+        actor, aopt, _ = adamw_update(ga, st.actor_opt, st.actor, oc)
+        soft = lambda t, o: jax.tree_util.tree_map(
+            lambda a_, b_: (1 - cfg.tau_soft) * a_ + cfg.tau_soft * b_, t, o)
+        return st._replace(
+            actor=actor, critic=critic, actor_opt=aopt, critic_opt=copt,
+            target_actor=soft(st.target_actor, actor),
+            target_critic=soft(st.target_critic, critic),
+        )
+
+    def step(carry, key_t):
+        st, s, best_f, best_v = carry
+        k1, k2 = jax.random.split(key_t)
+        a = nets.mlp_apply(st.actor, s) + cfg.act_noise * jax.random.normal(k1, (adim,))
+        r, s2 = env_step(s, a)
+        idx = jnp.mod(st.buf_n, cfg.buffer)
+        st = st._replace(
+            buf_s=st.buf_s.at[idx].set(s), buf_a=st.buf_a.at[idx].set(a),
+            buf_r=st.buf_r.at[idx].set(r), buf_s2=st.buf_s2.at[idx].set(s2),
+            buf_n=st.buf_n + 1,
+        )
+        hi = jnp.minimum(st.buf_n, cfg.buffer)
+        batch_idx = jax.random.randint(k2, (cfg.batch,), 0, jnp.maximum(hi, 1))
+        st = jax.lax.cond(st.buf_n >= cfg.warmup, lambda: td_update(st, batch_idx), lambda: st)
+        f = _fractions(a, i_n, d)
+        v = cloud_objective(ctx, f, peak_state)
+        better = v < best_v
+        best_f = jnp.where(better, f, best_f)
+        best_v = jnp.where(better, v, best_v)
+        return (st, s2, best_f, best_v), r
+
+    s0 = f0.reshape(-1)
+    v0 = cloud_objective(ctx, f0, peak_state)
+    (st, _, best_f, best_v), rs = jax.lax.scan(
+        step, (state, s0, f0, v0), jax.random.split(key, cfg.steps))
+    return SolveResult(best_f, {"best": best_v, "rewards": rs})

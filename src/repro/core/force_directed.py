@@ -1,0 +1,53 @@
+"""FD: Force-Directed greedy baseline (comparison technique (a), [18]).
+
+Adaptation of force-directed scheduling: the "force" on a (task-type, DC)
+cell is the marginal objective increase of routing load there; each
+iteration greedily moves a quantum of every player's load from its
+highest-force DC to its lowest-force DC. Fast, but the myopic quantum moves
+stall in local minima (paper §7.1 observes FD over-provisioning nodes).
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+
+from .game import GameContext, SolveResult, cloud_objective, uniform_fractions
+
+
+@dataclasses.dataclass(frozen=True)
+class FDConfig:
+    iters: int = 120
+    quantum: float = 0.06  # fraction of a player's load moved per iteration
+
+
+def solve_epoch(key, ctx: GameContext, peak_state: jnp.ndarray,
+                cfg: FDConfig = FDConfig()) -> SolveResult:
+    del key
+    f0 = uniform_fractions(ctx)
+
+    def obj(f):
+        return cloud_objective(ctx, f, peak_state)
+
+    def it(carry, _):
+        f, best_f, best_v = carry
+        # forces: marginal d(objective)/d(fraction) per cell
+        force = jax.grad(obj)(f)  # (I, D)
+        src = jnp.argmax(jnp.where(f > 1e-6, force, -jnp.inf), axis=1)  # (I,)
+        dst = jnp.argmin(force, axis=1)
+        move = cfg.quantum * jnp.take_along_axis(f, src[:, None], axis=1)[:, 0]
+        onehot_src = jax.nn.one_hot(src, f.shape[1])
+        onehot_dst = jax.nn.one_hot(dst, f.shape[1])
+        f = f - move[:, None] * onehot_src + move[:, None] * onehot_dst
+        f = jnp.clip(f, 0.0, None)
+        f = f / jnp.sum(f, axis=1, keepdims=True)
+        v = obj(f)
+        better = v < best_v
+        best_f = jnp.where(better, f, best_f)
+        best_v = jnp.where(better, v, best_v)
+        return (f, best_f, best_v), v
+
+    v0 = obj(f0)
+    (_, best_f, best_v), vals = jax.lax.scan(it, (f0, f0, v0), None, length=cfg.iters)
+    return SolveResult(best_f, {"values": vals, "best": best_v})

@@ -1,0 +1,136 @@
+"""The non-cooperative workload-distribution game (paper §4–§5.1).
+
+Players are task types i ∈ I; a strategy is the simplex row of desired
+fractions DF_i (eq. 21) which maps to arrival rates AR_i = DF_i · CAR_i;
+player i's reward is its own estimated carbon CET_i (eq. 12) or cost CCT_i
+(eq. 17) given everyone's strategies. The solution concept is Nash
+equilibrium (eqs. 19/20): no player can improve unilaterally.
+
+This module holds the shared machinery every solver uses: the strategy
+representation, the per-player objective closure, feasibility projection,
+and the Nash-residual diagnostic.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Callable, Dict, NamedTuple, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from ..dcsim import env as E
+
+
+@dataclasses.dataclass(frozen=True)
+class GameContext:
+    """One epoch's decision problem.
+
+    Registered as a pytree (env + tau dynamic, objective static) so solvers
+    jit once per env *shape* and run all 24 epochs without recompiling.
+    """
+    env: E.EnvParams
+    tau: Any  # int or traced scalar
+    objective: str = "carbon"  # carbon | cost
+
+    def num_players(self) -> int:
+        return E.num_players(self.env)
+
+    def num_dcs(self) -> int:
+        return E.num_dcs(self.env)
+
+
+def _ctx_flatten(ctx: GameContext):
+    return (ctx.env, ctx.tau), ctx.objective
+
+
+def _ctx_unflatten(objective, children):
+    env, tau = children
+    return GameContext(env=env, tau=tau, objective=objective)
+
+
+jax.tree_util.register_pytree_node(GameContext, _ctx_flatten, _ctx_unflatten)
+
+
+def fractions_to_ar(ctx: GameContext, fractions: jnp.ndarray) -> jnp.ndarray:
+    """(I, D) simplex rows -> feasible AR (eqs. 1, 2, 21)."""
+    return E.project_feasible(ctx.env, fractions, ctx.tau)
+
+
+def uniform_fractions(ctx: GameContext) -> jnp.ndarray:
+    i, d = ctx.num_players(), ctx.num_dcs()
+    return jnp.full((i, d), 1.0 / d)
+
+
+def capacity_fractions(ctx: GameContext) -> jnp.ndarray:
+    """ER-proportional start (a natural feasible point)."""
+    return ctx.env.er / jnp.sum(ctx.env.er, axis=1, keepdims=True)
+
+
+def player_rewards(
+    ctx: GameContext, fractions: jnp.ndarray, peak_state: jnp.ndarray
+) -> jnp.ndarray:
+    """(I,) per-player objective values (lower better)."""
+    ar = fractions_to_ar(ctx, fractions)
+    return E.player_reward(ctx.env, ar, ctx.tau, peak_state, ctx.objective)
+
+
+def cloud_objective(
+    ctx: GameContext, fractions: jnp.ndarray, peak_state: jnp.ndarray
+) -> jnp.ndarray:
+    """Scalar cloud-level objective (eq. 13 or 18)."""
+    return jnp.sum(player_rewards(ctx, fractions, peak_state))
+
+
+def replace_player(fractions: jnp.ndarray, i, row: jnp.ndarray) -> jnp.ndarray:
+    return fractions.at[i].set(row)
+
+
+def player_objective(
+    ctx: GameContext, fractions: jnp.ndarray, i, row: jnp.ndarray,
+    peak_state: jnp.ndarray,
+) -> jnp.ndarray:
+    """Player i's reward when it unilaterally plays ``row``."""
+    f = replace_player(fractions, i, row)
+    return player_rewards(ctx, f, peak_state)[i]
+
+
+def nash_residual(
+    ctx: GameContext,
+    fractions: jnp.ndarray,
+    peak_state: jnp.ndarray,
+    probe_steps: int = 25,
+    lr: float = 0.5,
+) -> jnp.ndarray:
+    """How far from Nash: max relative unilateral improvement any player can
+    find with a short projected-gradient probe. 0 at (local) equilibrium."""
+    i_n = fractions.shape[0]
+
+    def probe(i):
+        base = player_rewards(ctx, fractions, peak_state)[i]
+
+        def obj(logits):
+            return player_objective(ctx, fractions, i, jax.nn.softmax(logits), peak_state)
+
+        logits0 = jnp.log(fractions[i] + 1e-9)
+
+        def step(logits, _):
+            g = jax.grad(obj)(logits)
+            return logits - lr * g / (jnp.linalg.norm(g) + 1e-9), None
+
+        logits, _ = jax.lax.scan(step, logits0, None, length=probe_steps)
+        best = obj(logits)
+        return jnp.maximum(base - best, 0.0) / (jnp.abs(base) + 1e-9)
+
+    return jnp.max(jax.vmap(probe)(jnp.arange(i_n)))
+
+
+# ---------------------------------------------------------------------------
+# scheduler interface: every technique maps a GameContext to fractions
+# ---------------------------------------------------------------------------
+
+class SolveResult(NamedTuple):
+    fractions: jnp.ndarray       # (I, D)
+    info: Dict[str, jnp.ndarray]
+
+
+Scheduler = Callable[..., SolveResult]  # (ctx, peak_state, key) -> SolveResult

@@ -1,0 +1,68 @@
+"""GA: Genitor-style steady-state genetic algorithm (technique (b), [16]).
+
+Population of strategy matrices; rank-based parent selection (Genitor [44]),
+row-wise arithmetic crossover, Dirichlet mutation, replace-worst. The
+iteration budget models the paper's one-hour wall-clock cap: it is *fixed*
+per problem size, so quality degrades as |I|·|D| grows — exactly the
+instability the paper reports for GA at 8/16 DCs.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+
+from .game import GameContext, SolveResult, cloud_objective, uniform_fractions
+
+
+@dataclasses.dataclass(frozen=True)
+class GAConfig:
+    population: int = 32
+    generations: int = 150   # fixed budget ≈ the paper's 1-hour cap
+    mutate_prob: float = 0.3
+    mutate_conc: float = 25.0  # Dirichlet concentration (higher = smaller step)
+
+
+def solve_epoch(key, ctx: GameContext, peak_state: jnp.ndarray,
+                cfg: GAConfig = GAConfig()) -> SolveResult:
+    i_n, d = ctx.num_players(), ctx.num_dcs()
+
+    def obj(f):
+        return cloud_objective(ctx, f, peak_state)
+
+    k0, key = jax.random.split(key)
+    f0 = uniform_fractions(ctx)
+    pop = jax.random.dirichlet(k0, jnp.ones((cfg.population, i_n, d)))
+    pop = pop.at[0].set(f0)  # seed with the neutral uniform split
+    fit = jax.vmap(obj)(pop)
+
+    def gen(carry, key_g):
+        pop, fit = carry
+        k1, k2, k3, k4 = jax.random.split(key_g, 4)
+        # Genitor rank-based selection: linear bias toward better ranks
+        order = jnp.argsort(fit)  # ascending (minimization)
+        ranks = jnp.argsort(order)
+        p_sel = (cfg.population - ranks).astype(jnp.float32)
+        p_sel = p_sel / jnp.sum(p_sel)
+        pa = jax.random.choice(k1, cfg.population, p=p_sel)
+        pb = jax.random.choice(k2, cfg.population, p=p_sel)
+        # row-wise arithmetic crossover
+        mix = jax.random.uniform(k3, (i_n, 1))
+        child = mix * pop[pa] + (1 - mix) * pop[pb]
+        # Dirichlet mutation on a random subset of rows
+        mut = jax.random.dirichlet(k4, child * cfg.mutate_conc + 0.3)
+        do_mut = jax.random.uniform(jax.random.fold_in(k4, 1), (i_n, 1)) < cfg.mutate_prob
+        child = jnp.where(do_mut, mut, child)
+        child = child / jnp.sum(child, axis=1, keepdims=True)
+        cv = obj(child)
+        # replace worst
+        worst = jnp.argmax(fit)
+        better = cv < fit[worst]
+        pop = pop.at[worst].set(jnp.where(better, child, pop[worst]))
+        fit = fit.at[worst].set(jnp.where(better, cv, fit[worst]))
+        return (pop, fit), jnp.min(fit)
+
+    (pop, fit), hist = jax.lax.scan(gen, (pop, fit), jax.random.split(key, cfg.generations))
+    best = pop[jnp.argmin(fit)]
+    return SolveResult(best, {"history": hist, "best": jnp.min(fit)})

@@ -1,0 +1,219 @@
+"""GT-DRL: the paper's contribution (§5.3).
+
+Per-player PPO agents embedded in the non-cooperative game: each round,
+every player best-responds with a few PPO iterations against the others'
+current strategies (Jacobi-style simultaneous best response — fully
+vmappable across players, which is how all |I| agents train on one
+accelerator at once), then strategies are re-combined. The game-theoretic
+decomposition shrinks each agent's state/action space from |I|·|D| to |D|
+(paper §5.3, the central scalability argument).
+
+State faithful to the paper: the player's own strategy (its fractions).
+``state_mode="env"`` (beyond-paper, flag-gated) appends normalized per-DC
+context features so the pretrained policy can condition on prices/carbon.
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Any, Dict, NamedTuple, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from ..dcsim import env as E
+from . import networks as nets
+from .game import GameContext, SolveResult, player_rewards, uniform_fractions
+from .ppo import AgentState, PPOConfig, agent_init, greedy_fractions, ppo_improve
+
+
+@dataclasses.dataclass(frozen=True)
+class GTDRLConfig:
+    ppo: PPOConfig = PPOConfig(horizon=6, episodes=32, iters=4, update_epochs=4)
+    rounds: int = 8                 # best-response (game) rounds per epoch
+    polish_steps: int = 40          # best-reply refinement of adopted proposals
+    polish_lr: float = 0.4
+    damping: float = 0.5            # Jacobi damping: blend of new vs old joint
+    state_mode: str = "strategy"    # strategy | env
+    pretrain_iters: int = 60
+
+
+def _ctx_features(env: E.EnvParams, tau, i) -> jnp.ndarray:
+    """Per-DC context for state_mode='env' (beyond-paper)."""
+    dmax = E.dp_max_t(env, tau)
+    feats = [
+        env.er[i] / jnp.max(env.er[i]),
+        dmax / (jnp.max(jnp.abs(dmax)) + 1e-9),
+        env.carbon / jnp.max(env.carbon),
+        env.eprice[:, tau] / jnp.max(env.eprice[:, tau]),
+        env.rp[:, tau] / (jnp.max(env.rp[:, tau]) + 1e-9),
+    ]
+    return jnp.concatenate(feats)
+
+
+def state_dim(env: E.EnvParams, mode: str) -> int:
+    d = E.num_dcs(env)
+    return d if mode == "strategy" else d + 5 * d
+
+
+def _state_of(env, tau, i, mode):
+    def fn(logits):
+        frac = jax.nn.softmax(logits)
+        if mode == "strategy":
+            return frac
+        return jnp.concatenate([frac, _ctx_features(env, tau, i)])
+    return fn
+
+
+def init_agents(key, env: E.EnvParams, cfg: GTDRLConfig) -> AgentState:
+    """Stacked per-player agents: leading axis |I| on every leaf."""
+    i_n, d = E.num_players(env), E.num_dcs(env)
+    sd = state_dim(env, cfg.state_mode)
+    keys = jax.random.split(key, i_n)
+    return jax.vmap(lambda k: agent_init(k, sd, d, cfg.ppo))(keys)
+
+
+def _player_reward_closure(env, tau, objective, peak_state, joint_fracs, i, scale):
+    """reward(logits) = -objective_i(joint with row i replaced) / scale."""
+
+    def fn(logits):
+        row = jax.nn.softmax(logits)
+        fr = joint_fracs.at[i].set(row)
+        ar = E.project_feasible(env, fr, tau)
+        r = E.player_reward(env, ar, tau, peak_state, objective)[i]
+        return -r / scale
+
+    return fn
+
+
+def _one_player_round(key, agent, env, tau, objective, peak_state, joint, i, mode, ppo_cfg,
+                      polish_steps=30, polish_lr=0.4):
+    """PPO-improve player i against fixed others; return (agent, greedy row)."""
+    base = jnp.abs(E.player_reward(
+        env, E.project_feasible(env, joint, tau), tau, peak_state, objective)[i]) + 1e-6
+    reward_of = _player_reward_closure(env, tau, objective, peak_state, joint, i, base)
+    state_of = _state_of(env, tau, i, mode)
+
+    def state0_fn(k):
+        # start episodes around the current strategy with Dirichlet jitter
+        alpha = joint[i] * 20.0 + 0.5
+        fr = jax.random.dirichlet(k, jnp.broadcast_to(alpha, (ppo_cfg.episodes, alpha.shape[0])))
+        if mode == "strategy":
+            return fr
+        ctxf = _ctx_features(env, tau, i)
+        return jnp.concatenate([fr, jnp.broadcast_to(ctxf, (ppo_cfg.episodes, ctxf.shape[0]))], axis=1)
+
+    k_ppo, k_cand = jax.random.split(key)
+    agent, info = ppo_improve(k_ppo, agent, state0_fn, state_of, reward_of, ppo_cfg)
+    # Best response over the learned policy's support: the stochastic policy
+    # proposes candidates (greedy mean + samples), the player adopts whichever
+    # proposal minimizes its own objective, never regressing below its current
+    # row. This is the game-theoretic step; PPO supplies the proposal
+    # distribution (paper §5.3: "the agent determines the optimal strategy").
+    state_now = state_of(jnp.log(joint[i] + 1e-9))
+    mu = nets.actor_mean(agent.actor, state_now)
+    std = jnp.exp(jnp.clip(agent.actor["log_std"], -4.0, 1.0))
+    n_cand = 16
+    eps = jax.random.normal(k_cand, (n_cand,) + mu.shape)
+    cand_logits = jnp.concatenate(
+        [mu[None], jnp.log(joint[i] + 1e-9)[None], mu[None] + std * eps], axis=0)
+    rewards = jax.vmap(reward_of)(cand_logits)
+    best_logits = cand_logits[jnp.argmax(rewards)]
+    # ... then the game's rapid best-reply refinement polishes BOTH the
+    # policy's best proposal and the incumbent row, adopting whichever basin
+    # wins (paper: GT-DRL "combin[es] the rapidness of a non-cooperative
+    # optimization strategy with the exploration abilities of DRL"). Polishing
+    # the incumbent too means a player's step never does worse than a pure
+    # best-reply step — exploration can only help, never commit to a worse
+    # basin.
+    def polish(logits, _):
+        g = jax.grad(lambda l: -reward_of(l))(logits)
+        return logits - polish_lr * g / (jnp.linalg.norm(g) + 1e-9), None
+
+    def run_polish(logits0):
+        out, _ = jax.lax.scan(polish, logits0, None, length=polish_steps)
+        return out
+
+    starts = jnp.stack([best_logits, jnp.log(joint[i] + 1e-9)])
+    polished = jax.vmap(run_polish)(starts)
+    finals = jnp.concatenate([polished, starts], axis=0)
+    final_rewards = jax.vmap(reward_of)(finals)
+    row = jax.nn.softmax(finals[jnp.argmax(final_rewards)])
+    return agent, row
+
+
+def solve_epoch(
+    key,
+    agents: AgentState,
+    ctx: GameContext,
+    peak_state: jnp.ndarray,
+    cfg: GTDRLConfig,
+    init_fracs: Optional[jnp.ndarray] = None,
+) -> Tuple[AgentState, SolveResult]:
+    """Run the game for one epoch: rounds × (all players PPO-best-respond)."""
+    env, tau, objective = ctx.env, ctx.tau, ctx.objective
+    i_n = E.num_players(env)
+    joint0 = init_fracs if init_fracs is not None else uniform_fractions(ctx)
+
+    def half_update(agents, joint, key_r, parity):
+        """Red-black Gauss-Seidel: players with index%2==parity best-respond
+        simultaneously (vmapped); the other half hold — sequential
+        information flow at Jacobi's vmap efficiency."""
+        keys = jax.random.split(key_r, i_n)
+        run = functools.partial(
+            _one_player_round, env=env, tau=tau, objective=objective,
+            peak_state=peak_state, joint=joint, mode=cfg.state_mode, ppo_cfg=cfg.ppo,
+            polish_steps=cfg.polish_steps, polish_lr=cfg.polish_lr)
+        agents, rows = jax.vmap(lambda k, a, i: run(k, a, i=i))(
+            keys, agents, jnp.arange(i_n))
+        mask = (jnp.arange(i_n) % 2 == parity)[:, None]
+        return agents, jnp.where(mask, rows, joint)
+
+    def one_round(carry, key_r):
+        agents, joint, best_joint, best_val = carry
+        k1, k2 = jax.random.split(key_r)
+        agents, joint = half_update(agents, joint, k1, 0)
+        agents, joint = half_update(agents, joint, k2, 1)
+        val = jnp.sum(player_rewards(ctx, joint, peak_state))
+        better = val < best_val
+        best_joint = jnp.where(better, joint, best_joint)
+        best_val = jnp.where(better, val, best_val)
+        return (agents, joint, best_joint, best_val), val
+
+    val0 = jnp.sum(player_rewards(ctx, joint0, peak_state))
+    carry0 = (agents, joint0, joint0, val0)
+    (agents, joint, best_joint, best_val), vals = jax.lax.scan(
+        one_round, carry0, jax.random.split(key, cfg.rounds))
+    return agents, SolveResult(best_joint, {"round_values": vals, "best": best_val})
+
+
+# ---------------------------------------------------------------------------
+# offline pretraining (paper §6: random uniformly-sampled arrival rates)
+# ---------------------------------------------------------------------------
+
+def pretrain(
+    key,
+    env: E.EnvParams,
+    objective: str,
+    cfg: GTDRLConfig,
+) -> AgentState:
+    """Offline training over random (tau, arrival-scale, strategy) contexts."""
+    i_n, d = E.num_players(env), E.num_dcs(env)
+    agents = init_agents(key, env, cfg)
+    peak0 = jnp.zeros((d,))
+
+    def one(carry, key_t):
+        agents = carry
+        k1, k2, k3, k4 = jax.random.split(key_t, 4)
+        tau = jax.random.randint(k1, (), 0, 24)
+        joint = jax.random.dirichlet(k2, jnp.ones((i_n, d)))
+        keys = jax.random.split(k3, i_n)
+        run = functools.partial(
+            _one_player_round, env=env, tau=tau, objective=objective,
+            peak_state=peak0, joint=joint, mode=cfg.state_mode, ppo_cfg=cfg.ppo,
+            polish_steps=cfg.polish_steps, polish_lr=cfg.polish_lr)
+        agents, _ = jax.vmap(lambda k, a, i: run(k, a, i=i))(keys, agents, jnp.arange(i_n))
+        return agents, None
+
+    agents, _ = jax.lax.scan(one, agents, jax.random.split(key, cfg.pretrain_iters))
+    return agents

@@ -1,0 +1,61 @@
+"""NASH: Best-Reply game-theoretic baseline (comparison technique (c), [17]).
+
+Classic sequential best-response: players take turns locally minimizing
+their own objective (projected gradient descent in logit space) with the
+others fixed, until a full sweep improves nobody. Converges fast but to
+*local* equilibria — the deficiency GT-DRL's exploration addresses
+(paper §5.1).
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+
+from .game import GameContext, SolveResult, cloud_objective, player_rewards, uniform_fractions
+
+
+@dataclasses.dataclass(frozen=True)
+class NashConfig:
+    sweeps: int = 6
+    inner_steps: int = 40
+    lr: float = 0.4
+
+
+def _best_reply(ctx: GameContext, peak_state, fractions, i, cfg: NashConfig):
+    """Local projected-gradient best response of player i."""
+
+    def obj(logits):
+        f = fractions.at[i].set(jax.nn.softmax(logits))
+        return player_rewards(ctx, f, peak_state)[i]
+
+    logits0 = jnp.log(fractions[i] + 1e-9)
+
+    def step(logits, _):
+        g = jax.grad(obj)(logits)
+        return logits - cfg.lr * g / (jnp.linalg.norm(g) + 1e-9), None
+
+    logits, _ = jax.lax.scan(step, logits0, None, length=cfg.inner_steps)
+    better = obj(logits) < obj(logits0)
+    return jnp.where(better, jax.nn.softmax(logits), fractions[i])
+
+
+def solve_epoch(key, ctx: GameContext, peak_state: jnp.ndarray,
+                cfg: NashConfig = NashConfig()) -> SolveResult:
+    del key  # deterministic
+    i_n = ctx.num_players()
+    f = uniform_fractions(ctx)
+
+    def sweep(f, _):
+        def per_player(j, f):
+            row = _best_reply(ctx, peak_state, f, j, cfg)
+            return f.at[j].set(row)
+
+        f = jax.lax.fori_loop(0, i_n, per_player, f)
+        return f, cloud_objective(ctx, f, peak_state)
+
+    f, vals = jax.lax.scan(sweep, f, None, length=cfg.sweeps)
+    return SolveResult(f, {"sweep_values": vals, "best": vals[-1]})

@@ -1,0 +1,64 @@
+"""Joint (non-game-theoretic) PPO baseline (comparison technique (e), [33]).
+
+One agent controls the entire cloud: state/action dims are |I|·|D| — the
+configuration whose state-space growth the paper's decomposition removes.
+Reuses the exact PPO machinery of ``core.ppo`` so the comparison isolates
+the game-theoretic decomposition, not implementation details.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+
+from .game import GameContext, SolveResult, cloud_objective, uniform_fractions
+from .ppo import AgentState, PPOConfig, agent_init, greedy_fractions, ppo_improve
+from . import networks as nets
+
+
+@dataclasses.dataclass(frozen=True)
+class JointPPOConfig:
+    ppo: PPOConfig = PPOConfig(horizon=6, episodes=64, iters=40, update_epochs=4)
+
+
+def solve_epoch(key, ctx: GameContext, peak_state: jnp.ndarray,
+                cfg: JointPPOConfig = JointPPOConfig()) -> SolveResult:
+    i_n, d = ctx.num_players(), ctx.num_dcs()
+    sdim = adim = i_n * d
+    k1, k2 = jax.random.split(key)
+    agent = agent_init(k1, sdim, adim, cfg.ppo)
+
+    f0 = uniform_fractions(ctx)
+    scale = jnp.abs(cloud_objective(ctx, f0, peak_state)) + 1e-6
+
+    def to_f(logits):
+        return jax.nn.softmax(logits.reshape(i_n, d), axis=-1)
+
+    def reward_of(logits):
+        return -cloud_objective(ctx, to_f(logits), peak_state) / scale
+
+    def state_of(logits):
+        return to_f(logits).reshape(-1)
+
+    def state0_fn(k):
+        alpha = f0 * 20.0 + 0.5
+        fr = jax.random.dirichlet(
+            k, jnp.broadcast_to(alpha, (cfg.ppo.episodes,) + alpha.shape))
+        return fr.reshape(cfg.ppo.episodes, -1)
+
+    agent, info = ppo_improve(k2, agent, state0_fn, state_of, reward_of, cfg.ppo)
+    # greedy output + a short local refinement of the learned proposal
+    logits = nets.actor_mean(agent.actor, f0.reshape(-1))
+
+    def polish(lg, _):
+        g = jax.grad(lambda l: -reward_of(l))(lg)
+        return lg - 0.4 * g / (jnp.linalg.norm(g) + 1e-9), None
+
+    logits, _ = jax.lax.scan(polish, logits, None, length=30)
+    row = to_f(logits)
+    v_row = cloud_objective(ctx, row, peak_state)
+    v0 = cloud_objective(ctx, f0, peak_state)
+    best = jnp.where(v_row < v0, row, f0)
+    return SolveResult(best, {"best": jnp.minimum(v_row, v0), "mean_reward": info["mean_reward"]})

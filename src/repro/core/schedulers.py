@@ -1,0 +1,135 @@
+"""Unified scheduler registry + the 24-epoch day simulation harness.
+
+Every technique exposes ``solve_epoch(key, ctx, peak_state) -> SolveResult``;
+``run_day`` drives any of them through the paper's experimental protocol:
+24 one-hour epochs, monthly peak-demand state threaded through, metrics
+from the *detailed* simulator (not the optimization estimate).
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any, Callable, Dict, List, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from ..dcsim import env as E
+from . import ddpg, force_directed, genetic, gt_drl, nash, ppo_joint
+from .game import GameContext, SolveResult, capacity_fractions, fractions_to_ar
+
+TECHNIQUES = ("fd", "ga", "nash", "ddpg", "ppo", "gt-drl")
+
+
+class GTDRLScheduler:
+    """Stateful wrapper: holds (pre)trained per-player agents across epochs."""
+
+    def __init__(self, env: E.EnvParams, objective: str, cfg: Optional[gt_drl.GTDRLConfig] = None,
+                 pretrain_key=None):
+        self.cfg = cfg or gt_drl.GTDRLConfig()
+        self.objective = objective
+        if pretrain_key is not None:
+            self.agents = gt_drl.pretrain(pretrain_key, env, objective, self.cfg)
+        else:
+            self.agents = gt_drl.init_agents(jax.random.PRNGKey(0), env, self.cfg)
+        self._solve = jax.jit(
+            lambda key, agents, ctx, peak: gt_drl.solve_epoch(key, agents, ctx, peak, self.cfg)
+        )
+
+    def solve_epoch(self, key, ctx: GameContext, peak_state) -> SolveResult:
+        self.agents, res = self._solve(key, self.agents, ctx, peak_state)
+        return res
+
+
+def get_scheduler(name: str, env: E.EnvParams, objective: str,
+                  pretrain_key=None, **overrides) -> Callable:
+    """Returns solve_epoch(key, ctx, peak_state) -> SolveResult, jitted so a
+    24-epoch day compiles once (GameContext is a pytree; tau is traced)."""
+    mods = {"fd": (force_directed, force_directed.FDConfig()),
+            "ga": (genetic, genetic.GAConfig()),
+            "nash": (nash, nash.NashConfig()),
+            "ddpg": (ddpg, ddpg.DDPGConfig()),
+            "ppo": (ppo_joint, ppo_joint.JointPPOConfig())}
+    if name in mods:
+        mod, default_cfg = mods[name]
+        cfg = overrides.get("cfg", default_cfg)
+        return jax.jit(functools.partial(mod.solve_epoch, cfg=cfg))
+    if name == "gt-drl":
+        sched = GTDRLScheduler(env, objective, overrides.get("cfg"), pretrain_key)
+        return sched.solve_epoch
+    raise KeyError(f"unknown technique {name!r}; known: {TECHNIQUES}")
+
+
+def run_day(
+    env: E.EnvParams,
+    technique: str,
+    objective: str = "carbon",
+    *,
+    seed: int = 0,
+    hours: int = 24,
+    pretrain: bool = True,
+    peak_state0: Optional[jnp.ndarray] = None,
+    cfg_override: Any = None,
+    solver: Optional[Callable] = None,
+) -> Dict[str, Any]:
+    """Run one technique through a day; returns per-epoch + total metrics."""
+    key = jax.random.PRNGKey(seed)
+    kp, key = jax.random.split(key)
+    if solver is None:
+        solver = get_scheduler(
+            technique, env, objective,
+            pretrain_key=kp if (technique == "gt-drl" and pretrain) else None,
+            **({"cfg": cfg_override} if cfg_override is not None else {}),
+        )
+    d = E.num_dcs(env)
+    peak = peak_state0 if peak_state0 is not None else jnp.zeros((d,))
+    per_epoch: List[Dict[str, float]] = []
+    totals = {"carbon_kg": 0.0, "cost_usd": 0.0, "violation": 0.0}
+    for tau in range(hours):
+        key, ks = jax.random.split(key)
+        ctx = GameContext(env=env, tau=jnp.int32(tau), objective=objective)
+        res = solver(ks, ctx, peak)
+        ar = fractions_to_ar(ctx, res.fractions)
+        peak, m = E.step_epoch(env, peak, ar, jnp.int32(tau))
+        row = {k: float(v) for k, v in m.items()}
+        row["tau"] = tau
+        per_epoch.append(row)
+        for k in totals:
+            totals[k] += row[k]
+    return {"per_epoch": per_epoch, "totals": totals, "technique": technique,
+            "objective": objective}
+
+
+def compare_techniques(
+    envs,
+    techniques=TECHNIQUES,
+    objective: str = "carbon",
+    *,
+    hours: int = 24,
+    seed0: int = 0,
+) -> Dict[str, Dict[str, Any]]:
+    """The paper's protocol: several runs (one env per resampled arrival
+    pattern), mean±stderr of daily totals. GT-DRL agents pretrain once on the
+    first env and are reused across runs (deploy-once semantics)."""
+    import numpy as np
+
+    if isinstance(envs, E.EnvParams):
+        envs = [envs]
+    out: Dict[str, Dict[str, Any]] = {}
+    metric = "carbon_kg" if objective == "carbon" else "cost_usd"
+    for t in techniques:
+        solver = get_scheduler(
+            t, envs[0], objective,
+            pretrain_key=jax.random.PRNGKey(seed0 + 999) if t == "gt-drl" else None)
+        vals = []
+        curves = []
+        for r, env in enumerate(envs):
+            res = run_day(env, t, objective, seed=seed0 + r, hours=hours, solver=solver)
+            vals.append(res["totals"][metric])
+            curves.append([e[metric] for e in res["per_epoch"]])
+        vals = np.asarray(vals)
+        out[t] = {
+            "mean": float(vals.mean()),
+            "stderr": float(vals.std(ddof=1) / np.sqrt(len(vals))) if len(envs) > 1 else 0.0,
+            "curve_mean": np.asarray(curves).mean(axis=0).tolist(),
+        }
+    return out

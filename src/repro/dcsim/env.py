@@ -1,0 +1,249 @@
+"""The geo-distributed cloud environment: paper eqs. (1)–(18) in JAX.
+
+Everything is a pure function of an ``EnvParams`` NamedTuple of jnp arrays,
+so objectives are jittable, vmappable (batched game episodes) and
+differentiable (the NASH best-reply baseline exploits the gradients).
+
+Shapes: I task types × D data centers × 24 UTC hours.
+Units: power W, energy cost $/h (prices $/kWh applied to W/1000),
+carbon kg/h, rates tasks/hour.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Dict, NamedTuple, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from . import colocation, power, renewables, topology, workload
+from .topology import CRAC_MAX_W, CRAC_PER_DC, NETWORK_PRICE, NODES_PER_DC
+
+
+class EnvParams(NamedTuple):
+    er: jnp.ndarray          # (I, D) max execution rate, tasks/h (eq. 3)
+    it_idle: jnp.ndarray     # (D,) W
+    it_dyn: jnp.ndarray      # (D,) W at full utilization
+    tsupply: jnp.ndarray     # (D,) CRAC supply temperature °C
+    eff: jnp.ndarray         # (D,) PSU overhead ≥ 1
+    rp: jnp.ndarray          # (D, 24) renewable W
+    carbon: jnp.ndarray      # (D,) kg CO2 / kWh
+    eprice: jnp.ndarray      # (D, 24) $/kWh TOU
+    peak_price: jnp.ndarray  # (D,) $/kW-month
+    alpha: jnp.ndarray       # (D,) net metering fraction
+    nprice: jnp.ndarray      # scalar $/GB
+    sizes: jnp.ndarray       # (I,) GB per task
+    nn_total: jnp.ndarray    # (D,) node count
+    car: jnp.ndarray         # (I, 24) cloud arrival rates
+
+
+# ---------------------------------------------------------------------------
+# construction
+# ---------------------------------------------------------------------------
+
+def build_env(
+    num_dcs: int = 4,
+    *,
+    month: int = 6,
+    pattern: str = "sinusoidal",
+    seed: int = 0,
+    utilization: float = 0.45,
+    include_tpu: bool = False,
+    renewable_scale: float = 0.8,
+) -> EnvParams:
+    locs = topology.dc_locations(num_dcs)
+    loc_rows = [topology.LOCATIONS[i] for i in locs]
+    nn = topology.node_mix(seed, num_dcs, include_tpu=include_tpu)
+    er = colocation.er_table(nn)  # (I, D) tasks/h
+
+    idle, dyn = power.node_power_arrays(nn.shape[1])
+    it_idle = nn @ idle
+    it_dyn = nn @ dyn
+    rng = np.random.default_rng(seed + 17)
+    tsupply = rng.uniform(16.0, 24.0, num_dcs)
+    eff = rng.uniform(1.10, 1.25, num_dcs)
+
+    tz = np.array([r[2] for r in loc_rows])
+    carbon = np.array([r[3] for r in loc_rows])
+    base_price = np.array([r[4] for r in loc_rows])
+    peak_price = np.array([r[5] for r in loc_rows])
+    alpha = np.array([r[6] for r in loc_rows])
+    solar_cap = np.array([r[7] for r in loc_rows])
+    wind_cap = np.array([r[8] for r in loc_rows])
+
+    # TOU profile: peak window 2–8 PM local at 1.7×, shoulder 1.2×, off 0.8×
+    hours = np.arange(24)
+    eprice = np.zeros((num_dcs, 24))
+    for d in range(num_dcs):
+        local = (hours + tz[d]) % 24
+        mult = np.where((local >= 14) & (local < 20), 1.7,
+                        np.where((local >= 8) & (local < 14), 1.2, 0.8))
+        eprice[d] = base_price[d] * mult
+
+    installed = renewable_scale * (it_idle + 0.5 * it_dyn)
+    rp = renewables.renewable_profile(tz, solar_cap, wind_cap, 1.0, month, seed)
+    rp = rp * installed[:, None]
+
+    sizes = np.array([t[2] for t in topology.TASK_TYPES])
+    # peak rate per type: w_i (Σw=1) of its own capacity × target utilization,
+    # so the *total* utilization Σ_i CAR_i/cap_i peaks near ``utilization``.
+    w = np.random.default_rng(1234).dirichlet(np.ones(er.shape[0]) * 3.0)
+    base = utilization * w * np.asarray(er).sum(axis=1)
+    car = workload.arrival_pattern(pattern, base, seed=seed)
+
+    f = jnp.asarray
+    return EnvParams(
+        er=f(er), it_idle=f(it_idle), it_dyn=f(it_dyn), tsupply=f(tsupply),
+        eff=f(eff), rp=f(rp), carbon=f(carbon), eprice=f(eprice),
+        peak_price=f(peak_price), alpha=f(alpha),
+        nprice=jnp.float32(NETWORK_PRICE), sizes=f(sizes),
+        nn_total=f(nn.sum(axis=1).astype(float)), car=f(car),
+    )
+
+
+def num_players(env: EnvParams) -> int:
+    return env.er.shape[0]
+
+
+def num_dcs(env: EnvParams) -> int:
+    return env.er.shape[1]
+
+
+# ---------------------------------------------------------------------------
+# paper objective functions
+# ---------------------------------------------------------------------------
+
+def dp_max_t(env: EnvParams, tau) -> jnp.ndarray:
+    """DP_max[d] at hour tau (eq. 9)."""
+    it = env.it_idle + env.it_dyn
+    crac = jnp.minimum(it / power_cop(env), CRAC_PER_DC * CRAC_MAX_W)
+    return (it + crac) * env.eff - env.rp[:, tau]
+
+
+def power_cop(env: EnvParams) -> jnp.ndarray:
+    t = env.tsupply
+    return 0.0068 * t * t + 0.0008 * t + 0.458
+
+
+def dp_est(env: EnvParams, ar: jnp.ndarray, tau) -> jnp.ndarray:
+    """DP_est[i, d] (eq. 10): share of DP_max by rate fraction."""
+    frac = ar / jnp.maximum(env.er, 1e-9)
+    return dp_max_t(env, tau)[None, :] * frac
+
+
+def cet_est(env: EnvParams, ar: jnp.ndarray, tau) -> jnp.ndarray:
+    """CET[i] (eqs. 11–12): estimated cloud carbon per player, kg/h."""
+    de = env.carbon[None, :] * dp_est(env, ar, tau) / 1000.0
+    return jnp.sum(de, axis=1)
+
+
+def ce_est(env: EnvParams, ar: jnp.ndarray, tau) -> jnp.ndarray:
+    """CE (eq. 13): total estimated cloud carbon."""
+    return jnp.sum(cet_est(env, ar, tau))
+
+
+def nc_est(env: EnvParams, ar: jnp.ndarray) -> jnp.ndarray:
+    """NC_est[i, d] (eqs. 14–15)."""
+    ncmax = env.nprice * env.nn_total[None, :] * env.sizes[:, None]
+    return ncmax * ar / jnp.maximum(env.er, 1e-9)
+
+
+def grid_power(env: EnvParams, ar: jnp.ndarray, tau) -> jnp.ndarray:
+    """Detailed net DC power DP[d] (eq. 4) for a full assignment."""
+    rho = jnp.sum(ar / jnp.maximum(env.er, 1e-9), axis=0)  # (D,)
+    it = env.it_idle + env.it_dyn * jnp.clip(rho, 0.0, 1.0)
+    crac = jnp.minimum(it / power_cop(env), CRAC_PER_DC * CRAC_MAX_W)
+    return (it + crac) * env.eff - env.rp[:, tau]
+
+
+def peak_increase(env: EnvParams, ar: jnp.ndarray, tau, peak_state: jnp.ndarray) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """Δ_peak[d] (eq. 6) in $, plus the updated monthly peak state (W)."""
+    draw = jnp.maximum(grid_power(env, ar, tau), 0.0)
+    new_peak = jnp.maximum(peak_state, draw)
+    delta = env.peak_price * (new_peak - peak_state) / 1000.0
+    return delta, new_peak
+
+
+def cct_est(env: EnvParams, ar: jnp.ndarray, tau, peak_state: jnp.ndarray) -> jnp.ndarray:
+    """CCT[i] (eqs. 16–17): estimated cloud operating cost per player, $/h."""
+    dpe = dp_est(env, ar, tau)  # (I, D) W
+    a = jnp.where(dpe > 0, 1.0, env.alpha[None, :])
+    energy = env.eprice[:, tau][None, :] * a * dpe / 1000.0
+    delta, _ = peak_increase(env, ar, tau, peak_state)
+    dc = energy + delta[None, :] + nc_est(env, ar)
+    return jnp.sum(dc, axis=1)
+
+
+def cc_est(env: EnvParams, ar: jnp.ndarray, tau, peak_state: jnp.ndarray) -> jnp.ndarray:
+    """CC (eq. 18)."""
+    return jnp.sum(cct_est(env, ar, tau, peak_state))
+
+
+def player_reward(env, ar, tau, peak_state, objective: str) -> jnp.ndarray:
+    """(I,) per-player objective value (lower is better)."""
+    if objective == "carbon":
+        return cet_est(env, ar, tau)
+    return cct_est(env, ar, tau, peak_state)
+
+
+# ---------------------------------------------------------------------------
+# constraints (eqs. 1–2)
+# ---------------------------------------------------------------------------
+
+def feasible_violation(env: EnvParams, ar: jnp.ndarray, tau) -> jnp.ndarray:
+    """Aggregate constraint violation (0 when feasible)."""
+    split = jnp.abs(jnp.sum(ar, axis=1) - env.car[:, tau])  # eq. (1)
+    over = jnp.maximum(ar - env.er, 0.0)                    # eq. (2)
+    return jnp.sum(split) + jnp.sum(over)
+
+
+def project_feasible(env: EnvParams, fractions: jnp.ndarray, tau) -> jnp.ndarray:
+    """Map simplex fractions (I, D) → feasible AR (both constraints).
+
+    Rates beyond a DC's ER are redistributed to DCs with headroom
+    (iterative water-filling, 4 rounds is enough at <=60% utilization).
+    """
+    car = env.car[:, tau]
+    ar = fractions * car[:, None]
+
+    def body(ar, _):
+        over = jnp.maximum(ar - env.er, 0.0)
+        ar = ar - over
+        head = jnp.maximum(env.er - ar, 0.0)
+        w = head / jnp.maximum(jnp.sum(head, axis=1, keepdims=True), 1e-9)
+        ar = ar + jnp.sum(over, axis=1, keepdims=True) * w
+        return ar, None
+
+    ar, _ = jax.lax.scan(body, ar, None, length=4)
+    return jnp.minimum(ar, env.er)
+
+
+# ---------------------------------------------------------------------------
+# detailed epoch simulation (ground-truth metrics, not the estimate)
+# ---------------------------------------------------------------------------
+
+def step_epoch(
+    env: EnvParams, peak_state: jnp.ndarray, ar: jnp.ndarray, tau
+) -> Tuple[jnp.ndarray, Dict[str, jnp.ndarray]]:
+    """Simulate one epoch under assignment ``ar``; returns (new_peak, metrics)."""
+    dp = grid_power(env, ar, tau)  # (D,) W, can be negative
+    de = env.carbon * dp / 1000.0  # kg/h (negative = displaced grid carbon)
+    a = jnp.where(dp > 0, 1.0, env.alpha)
+    energy_cost = env.eprice[:, tau] * a * dp / 1000.0
+    delta, new_peak = peak_increase(env, ar, tau, peak_state)
+    net_cost = jnp.sum(env.nprice * env.sizes[:, None] * ar, axis=0) / 1000.0
+    total_cost = energy_cost + delta + net_cost
+    viol = feasible_violation(env, ar, tau)
+    rho = jnp.sum(ar / jnp.maximum(env.er, 1e-9), axis=0)
+    metrics = {
+        "carbon_kg": jnp.sum(de),
+        "cost_usd": jnp.sum(total_cost),
+        "energy_cost_usd": jnp.sum(energy_cost),
+        "peak_cost_usd": jnp.sum(delta),
+        "network_cost_usd": jnp.sum(net_cost),
+        "grid_power_w": jnp.sum(jnp.maximum(dp, 0.0)),
+        "violation": viol,
+        "max_rho": jnp.max(rho),
+    }
+    return new_peak, metrics

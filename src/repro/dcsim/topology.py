@@ -1,0 +1,135 @@
+"""Geo-distributed data-center topology: locations, node types, task types.
+
+Faithful to the paper's simulation environment (§6): 4/8/16 DC configs over
+continental-US cities with an even east/west split; each DC has 4,320 nodes
+in four aisles drawn from three Xeon node types; ten AIBench-derived task
+types. The raw measurement tables of [16]/[37] are unpublished, so the
+numeric tables here are synthetic-but-shaped: magnitudes match the cited
+hardware (Xeon TDPs, AIBench-class inference latencies) and all relative
+structure (memory-intensity classes, heterogeneous speeds) is preserved.
+A TPU-v5e node type is included as the beyond-paper bridge to the serving
+substrate (execution rates derived from the roofline analysis).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, List, Tuple
+
+import numpy as np
+
+# ---------------------------------------------------------------------------
+# Node types (paper §6: Intel Xeon E3-1225v3, E5649, E5-2697v2)
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass(frozen=True)
+class NodeType:
+    name: str
+    cores: int
+    idle_w: float     # package idle power, W
+    peak_dyn_w: float  # peak dynamic power (all cores), W
+    ghz: float
+
+
+NODE_TYPES: Tuple[NodeType, ...] = (
+    NodeType("xeon-e3-1225v3", 4, 18.0, 66.0, 3.2),
+    NodeType("xeon-e5649", 6, 35.0, 80.0, 2.53),
+    NodeType("xeon-e5-2697v2", 12, 45.0, 130.0, 2.7),
+    # beyond-paper accelerator node (execution rates filled from roofline)
+    NodeType("tpu-v5e-host", 4, 120.0, 400.0, 0.0),
+)
+NUM_XEON_TYPES = 3
+
+# ---------------------------------------------------------------------------
+# Task types (paper Table 2: AIBench inference workloads)
+# columns: name, mem-intensity class (0 low,1 med,2 high), size GB,
+#          base exec time (s) on the three Xeon types
+# ---------------------------------------------------------------------------
+
+TASK_TYPES: Tuple[Tuple[str, int, float, Tuple[float, float, float]], ...] = (
+    ("image-classification", 1, 0.30, (0.08, 0.12, 0.05)),
+    ("image-generation", 2, 0.80, (1.90, 2.60, 1.20)),
+    ("image-to-text", 1, 0.45, (0.55, 0.80, 0.35)),
+    ("image-to-image", 2, 0.90, (2.30, 3.10, 1.50)),
+    ("speech-recognition", 1, 0.60, (0.70, 1.00, 0.45)),
+    ("face-embedding", 0, 0.25, (0.06, 0.09, 0.04)),
+    ("face-recognition-3d", 1, 0.55, (0.90, 1.30, 0.60)),
+    ("video-prediction", 2, 1.20, (2.80, 3.90, 1.80)),
+    ("image-compression", 1, 0.40, (0.50, 0.75, 0.32)),
+    ("object-reconstruction-3d", 2, 1.00, (2.10, 2.90, 1.40)),
+)
+
+NUM_TASK_TYPES = len(TASK_TYPES)
+
+# ---------------------------------------------------------------------------
+# Locations: (city, state, tz offset h vs UTC, carbon factor kgCO2/kWh
+#             [EIA-shaped], TOU base $/kWh, peak demand $/kW, net metering α,
+#             solar capacity factor, wind capacity factor)
+# ---------------------------------------------------------------------------
+
+LOCATIONS: Tuple[Tuple[str, str, int, float, float, float, float, float, float], ...] = (
+    ("new-york", "NY", -5, 0.23, 0.180, 18.0, 1.00, 0.35, 0.25),
+    ("san-francisco", "CA", -8, 0.21, 0.220, 20.0, 1.00, 0.65, 0.40),
+    ("chicago", "IL", -6, 0.43, 0.120, 14.0, 1.00, 0.40, 0.55),
+    ("dallas", "TX", -6, 0.41, 0.095, 11.0, 0.75, 0.60, 0.85),
+    ("seattle", "WA", -8, 0.09, 0.090, 10.0, 1.00, 0.30, 0.45),
+    ("miami", "FL", -5, 0.39, 0.110, 12.0, 0.50, 0.60, 0.20),
+    ("denver", "CO", -7, 0.55, 0.115, 13.0, 1.00, 0.70, 0.75),
+    ("boston", "MA", -5, 0.31, 0.210, 19.0, 1.00, 0.35, 0.35),
+    ("phoenix", "AZ", -7, 0.37, 0.105, 12.5, 0.70, 0.85, 0.30),
+    ("atlanta", "GA", -5, 0.40, 0.100, 11.5, 0.00, 0.50, 0.20),
+    ("portland", "OR", -8, 0.12, 0.095, 10.5, 1.00, 0.35, 0.50),
+    ("columbus", "OH", -5, 0.52, 0.115, 13.5, 1.00, 0.38, 0.40),
+    ("salt-lake-city", "UT", -7, 0.58, 0.098, 11.0, 0.85, 0.75, 0.55),
+    ("kansas-city", "MO", -6, 0.60, 0.100, 12.0, 1.00, 0.48, 0.70),
+    ("las-vegas", "NV", -8, 0.34, 0.102, 12.0, 0.90, 0.88, 0.35),
+    ("charlotte", "NC", -5, 0.33, 0.098, 11.0, 0.00, 0.52, 0.22),
+)
+
+
+def dc_locations(num_dcs: int) -> List[int]:
+    """Pick an even east/west coast mix as the paper does (Fig. 5)."""
+    assert num_dcs in (4, 8, 16), num_dcs
+    if num_dcs == 4:
+        return [0, 1, 3, 4]  # NY, SF, Dallas, Seattle
+    if num_dcs == 8:
+        return [0, 1, 2, 3, 4, 5, 6, 7]
+    return list(range(16))
+
+
+NODES_PER_DC = 4320  # paper §6
+AISLES_PER_DC = 4
+CRAC_PER_DC = 4
+CRAC_MAX_W = 120_000.0  # per CRAC unit rating
+NETWORK_PRICE = 0.085   # $/GB (AWS CloudFront-shaped)
+
+
+def node_mix(seed: int, num_dcs: int, include_tpu: bool = False) -> np.ndarray:
+    """NN[d, j]: heterogeneous node counts per DC, rows sum to 4320.
+
+    'most locations having three node types', some with two (paper §6).
+    """
+    rng = np.random.default_rng(seed)
+    jn = NUM_XEON_TYPES + (1 if include_tpu else 0)
+    out = np.zeros((num_dcs, jn), np.int64)
+    for d in range(num_dcs):
+        if d % 4 == 3:  # every 4th DC has two node types
+            w = rng.dirichlet(np.ones(2) * 4.0)
+            types = rng.choice(NUM_XEON_TYPES, 2, replace=False)
+            for t, wi in zip(types, w):
+                out[d, t] = int(round(wi * NODES_PER_DC))
+        else:
+            w = rng.dirichlet(np.ones(NUM_XEON_TYPES) * 4.0)
+            for t in range(NUM_XEON_TYPES):
+                out[d, t] = int(round(w[t] * NODES_PER_DC))
+        if include_tpu:
+            # carve out a TPU aisle (beyond-paper)
+            out[d, -1] = NODES_PER_DC // AISLES_PER_DC
+        out[d, : NUM_XEON_TYPES] = _fix_sum(out[d, : NUM_XEON_TYPES], NODES_PER_DC - out[d, -1] if include_tpu else NODES_PER_DC)
+    return out
+
+
+def _fix_sum(row: np.ndarray, want: int) -> np.ndarray:
+    diff = want - row.sum()
+    j = int(np.argmax(row))
+    row[j] += diff
+    return row

@@ -1,0 +1,159 @@
+"""Pure-jnp oracles for every Pallas kernel.
+
+These are the semantic ground truth: kernels are validated against these in
+interpret mode over shape/dtype sweeps, and the CPU dry-run path lowers these
+(XLA fuses them; FLOP/byte accounting is identical by construction).
+"""
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+NEG_INF = -0.7 * float(jnp.finfo(jnp.float32).max)
+
+
+def _broadcast_kv(k: jnp.ndarray, num_q_heads: int) -> jnp.ndarray:
+    """(B, S, KVH, D) -> (B, S, H, D) by repeating each kv head group-size times."""
+    b, s, kvh, d = k.shape
+    group = num_q_heads // kvh
+    if group == 1:
+        return k
+    return jnp.repeat(k, group, axis=2)
+
+
+def attention_ref(
+    q: jnp.ndarray,  # (B, Sq, H, D)
+    k: jnp.ndarray,  # (B, Skv, KVH, D)
+    v: jnp.ndarray,  # (B, Skv, KVH, D)
+    *,
+    causal: bool = True,
+    window: int = 0,
+    sm_scale: Optional[float] = None,
+    softcap: float = 0.0,
+    q_offset: int = 0,
+) -> jnp.ndarray:
+    """Multi-head attention with GQA, optional causal / sliding-window mask.
+
+    ``q_offset`` is the absolute position of q[0] (used at decode time when
+    Sq < Skv and the causal frontier sits at q_offset + i).
+    """
+    b, sq, h, d = q.shape
+    skv = k.shape[1]
+    sm_scale = sm_scale if sm_scale is not None else d ** -0.5
+    kb = _broadcast_kv(k, h)
+    vb = _broadcast_kv(v, h)
+    s = jnp.einsum("bqhd,bkhd->bhqk", q.astype(jnp.float32), kb.astype(jnp.float32))
+    s = s * sm_scale
+    if softcap > 0.0:
+        s = jnp.tanh(s / softcap) * softcap
+    q_pos = q_offset + jnp.arange(sq)[:, None]
+    k_pos = jnp.arange(skv)[None, :]
+    mask = jnp.ones((sq, skv), bool)
+    if causal:
+        mask &= k_pos <= q_pos
+    if window > 0:
+        mask &= k_pos > q_pos - window
+    s = jnp.where(mask[None, None], s, NEG_INF)
+    p = jax.nn.softmax(s, axis=-1)
+    o = jnp.einsum("bhqk,bkhd->bqhd", p, vb.astype(jnp.float32))
+    return o.astype(q.dtype)
+
+
+def attention_chunked(
+    q: jnp.ndarray,  # (B, Sq, H, D)
+    k: jnp.ndarray,  # (B, Skv, KVH, D)
+    v: jnp.ndarray,  # (B, Skv, KVH, D)
+    *,
+    causal: bool = True,
+    window: int = 0,
+    sm_scale: Optional[float] = None,
+    softcap: float = 0.0,
+    q_offset: int = 0,
+    chunk: int = 512,
+) -> jnp.ndarray:
+    """Flash-equivalent streaming attention in pure jnp (scan over KV chunks
+    with an online softmax). Semantically identical to :func:`attention_ref`
+    but with O(Sq·chunk) live memory instead of O(Sq·Skv) — this is what the
+    dry-run lowers on CPU so memory/byte accounting matches the Pallas
+    kernel's behavior on TPU.
+    """
+    b, sq, h, d = q.shape
+    skv = k.shape[1]
+    if skv <= chunk:
+        return attention_ref(q, k, v, causal=causal, window=window,
+                             sm_scale=sm_scale, softcap=softcap, q_offset=q_offset)
+    scale = sm_scale if sm_scale is not None else d ** -0.5
+    kb = _broadcast_kv(k, h)
+    vb = _broadcast_kv(v, h)
+    pad = (-skv) % chunk
+    if pad:
+        zp = lambda a: jnp.pad(a, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        kb, vb = zp(kb), zp(vb)
+    nc = (skv + pad) // chunk
+    kc = kb.reshape(b, nc, chunk, h, d).transpose(1, 0, 2, 3, 4)
+    vc = vb.reshape(b, nc, chunk, h, d).transpose(1, 0, 2, 3, 4)
+    qf = q.astype(jnp.float32)
+    q_pos = q_offset + jnp.arange(sq)
+
+    def body(carry, inp):
+        m_prev, l_prev, acc = carry
+        ci, kck, vck = inp
+        s = jnp.einsum("bqhd,bkhd->bhqk", qf, kck.astype(jnp.float32)) * scale
+        if softcap > 0.0:
+            s = jnp.tanh(s / softcap) * softcap
+        k_pos = ci * chunk + jnp.arange(chunk)
+        mask = (k_pos < skv)[None, :]
+        if causal:
+            mask = mask & (k_pos[None, :] <= q_pos[:, None])
+        if window > 0:
+            mask = mask & (k_pos[None, :] > q_pos[:, None] - window)
+        s = jnp.where(mask[None, None], s, NEG_INF)
+        m_cur = jnp.max(s, axis=-1)
+        m_new = jnp.maximum(m_prev, m_cur)
+        p = jnp.exp(s - m_new[..., None])
+        alpha = jnp.exp(m_prev - m_new)
+        l_new = alpha * l_prev + jnp.sum(p, axis=-1)
+        acc = acc * alpha[..., None] + jnp.einsum("bhqk,bkhd->bhqd", p, vck.astype(jnp.float32))
+        return (m_new, l_new, acc), None
+
+    m0 = jnp.full((b, h, sq), NEG_INF, jnp.float32)
+    l0 = jnp.zeros((b, h, sq), jnp.float32)
+    acc0 = jnp.zeros((b, h, sq, d), jnp.float32)
+    (m, l, acc), _ = jax.lax.scan(body, (m0, l0, acc0), (jnp.arange(nc), kc, vc))
+    l = jnp.where(l == 0.0, 1.0, l)
+    out = (acc / l[..., None]).transpose(0, 2, 1, 3)
+    return out.astype(q.dtype)
+
+
+def decode_attention_ref(
+    q: jnp.ndarray,  # (B, H, D) single new token per sequence
+    k_cache: jnp.ndarray,  # (B, S, KVH, D)
+    v_cache: jnp.ndarray,  # (B, S, KVH, D)
+    lengths: jnp.ndarray,  # (B,) int32: number of valid cache positions
+    *,
+    sm_scale: Optional[float] = None,
+    softcap: float = 0.0,
+) -> jnp.ndarray:
+    """Single-token decode attention over a (ragged-length) KV cache."""
+    b, h, d = q.shape
+    s_len = k_cache.shape[1]
+    sm_scale = sm_scale if sm_scale is not None else d ** -0.5
+    kb = _broadcast_kv(k_cache, h)  # (B, S, H, D)
+    vb = _broadcast_kv(v_cache, h)
+    s = jnp.einsum("bhd,bkhd->bhk", q.astype(jnp.float32), kb.astype(jnp.float32))
+    s = s * sm_scale
+    if softcap > 0.0:
+        s = jnp.tanh(s / softcap) * softcap
+    valid = jnp.arange(s_len)[None, :] < lengths[:, None]  # (B, S)
+    s = jnp.where(valid[:, None, :], s, NEG_INF)
+    p = jax.nn.softmax(s, axis=-1)
+    o = jnp.einsum("bhk,bkhd->bhd", p, vb.astype(jnp.float32))
+    return o.astype(q.dtype)
+
+
+def rmsnorm_ref(x: jnp.ndarray, scale: jnp.ndarray, eps: float = 1e-6) -> jnp.ndarray:
+    xf = x.astype(jnp.float32)
+    var = jnp.mean(xf * xf, axis=-1, keepdims=True)
+    return (xf * jax.lax.rsqrt(var + eps) * scale.astype(jnp.float32)).astype(x.dtype)

@@ -1,0 +1,238 @@
+import os
+os.environ["XLA_FLAGS"] = os.environ.get("REPRO_XLA_FLAGS", "--xla_force_host_platform_device_count=512")
+# ^ MUST precede every other import: jax locks the device count on first init.
+# (This also forces the module docstring below to be a plain expression and
+# bans `from __future__ import annotations` here — both are deliberate.)
+
+DOC = """Multi-pod dry-run (deliverable e).
+
+For every (architecture × input shape × mesh) cell: build the production
+mesh (16×16 single pod / 2×16×16 multi-pod), lower the right step function
+(train_step / prefill_step / decode_step) against ShapeDtypeStruct inputs
+with explicit parameter/batch/cache shardings, ``.compile()`` it, and record
+``memory_analysis()`` + ``cost_analysis()`` + the roofline terms.
+
+No real memory is allocated: parameters, optimizer state, batches and KV
+caches are all ShapeDtypeStructs via ``jax.eval_shape``.
+
+Usage:
+    python -m repro.launch.dryrun --all [--multipod-too] [--out experiments/dryrun]
+    python -m repro.launch.dryrun --arch qwen2-7b --shape train_4k --multipod
+"""
+
+import argparse
+import dataclasses
+import functools
+import json
+import time
+import traceback
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from ..configs import SHAPES, ARCHS, get_config, input_specs, param_specs_struct
+from ..configs.base import ModelConfig, ShapeConfig, shape_applicable
+from ..distributed import sharding as shd
+from ..optim.adamw import AdamWConfig, OptState
+from ..train import step as step_lib
+from . import roofline
+from .mesh import make_production_mesh
+
+FSDP_THRESHOLD = 5_000_000_000  # params; larger models shard storage over "data"
+
+
+def opt_config_for(cfg: ModelConfig) -> AdamWConfig:
+    # 480B params + f32 moments exceed one pod's HBM: store moments in bf16.
+    if cfg.param_count() > 3e11:
+        return AdamWConfig(moment_dtype="bfloat16")
+    return AdamWConfig()
+
+
+def _named(tree_specs, mesh):
+    return jax.tree_util.tree_map(
+        lambda s: NamedSharding(mesh, s), tree_specs,
+        is_leaf=lambda x: isinstance(x, P))
+
+
+def state_shardings(params_struct, opt_struct, mesh, fsdp: bool):
+    pspecs = shd.param_specs(params_struct, mesh, fsdp=fsdp)
+    mu = jax.tree_util.tree_map(lambda s: s, pspecs, is_leaf=lambda x: isinstance(x, P))
+    return step_lib.TrainState(
+        params=_named(pspecs, mesh),
+        opt=OptState(
+            step=NamedSharding(mesh, P()),
+            mu=_named(mu, mesh),
+            nu=_named(jax.tree_util.tree_map(lambda s: s, pspecs,
+                                             is_leaf=lambda x: isinstance(x, P)), mesh),
+        ),
+    )
+
+
+def _lower_compile(cfg: ModelConfig, shape: ShapeConfig, mesh) -> Tuple[Any, Any, str, Any]:
+    """Lower + compile one step function; returns (lowered, compiled, kind, params)."""
+    fsdp = cfg.param_count() >= FSDP_THRESHOLD
+    kind, specs = input_specs(cfg, shape)
+    params_struct = param_specs_struct(cfg)
+    with shd.use_mesh(mesh):
+        if kind == "train":
+            opt_cfg = opt_config_for(cfg)
+            state_struct = jax.eval_shape(
+                lambda: step_lib.init_train_state(jax.random.PRNGKey(0), cfg, opt_cfg))
+            st_sh = state_shardings(state_struct.params, state_struct.opt, mesh, fsdp)
+            b_sh = _named(shd.batch_specs_tree(specs["batch"], mesh, shape.global_batch), mesh)
+            fn = functools.partial(step_lib.train_step, cfg=cfg, opt_cfg=opt_cfg)
+            jfn = jax.jit(fn, in_shardings=(st_sh, b_sh), donate_argnums=(0,))
+            lowered = jfn.lower(state_struct, specs["batch"])
+        elif kind == "prefill":
+            p_sh = _named(shd.param_specs(params_struct, mesh, fsdp=fsdp), mesh)
+            b_sh = _named(shd.batch_specs_tree(specs["batch"], mesh, shape.global_batch), mesh)
+            fn = functools.partial(step_lib.prefill_step, cfg=cfg, cache_len=shape.seq_len)
+            jfn = jax.jit(fn, in_shardings=(p_sh, b_sh))
+            lowered = jfn.lower(params_struct, specs["batch"])
+        else:  # decode
+            p_sh = _named(shd.param_specs(params_struct, mesh, fsdp=fsdp), mesh)
+            tok_sh = _named(shd.batch_specs_tree(specs["token"], mesh, shape.global_batch), mesh)
+            pos_sh = _named(shd.batch_specs_tree(specs["positions"], mesh, shape.global_batch), mesh)
+            c_sh = _named(shd.cache_specs_tree(specs["cache"], mesh, shape.global_batch), mesh)
+            fn = functools.partial(step_lib.decode_step, cfg=cfg)
+            jfn = jax.jit(fn, in_shardings=(p_sh, tok_sh, pos_sh, c_sh), donate_argnums=(3,))
+            lowered = jfn.lower(params_struct, specs["token"], specs["positions"], specs["cache"])
+        compiled = lowered.compile()
+    return lowered, compiled, kind, params_struct
+
+
+def _probe_cfg(cfg: ModelConfig, n_layers: int) -> ModelConfig:
+    return dataclasses.replace(
+        cfg, num_layers=n_layers, scan_layers=False,
+        num_encoder_layers=min(cfg.num_encoder_layers, 2))
+
+
+def probe_costs(cfg: ModelConfig, shape: ShapeConfig, mesh) -> Tuple[float, float, float]:
+    """Exact per-device (flops, bytes, collective bytes), extrapolated
+    linearly in depth from two small fully-unrolled probes (L=p and L=2p).
+    Scanned production lowerings under-count while-body costs on the CPU
+    backend; the probes make every op's cost visible exactly once."""
+    p = len(cfg.pattern_period())
+    p = max(p, 1)
+    _, c1, _, _ = _lower_compile(_probe_cfg(cfg, p), shape, mesh)
+    costs_p = roofline.costs_of(c1)
+    del c1
+    _, c2, _, _ = _lower_compile(_probe_cfg(cfg, 2 * p), shape, mesh)
+    costs_2p = roofline.costs_of(c2)
+    del c2
+    return roofline.probe_extrapolate(costs_p, costs_2p, p, cfg.num_layers)
+
+
+def lower_cell(
+    arch: str,
+    shape_name: str,
+    multi_pod: bool,
+    mesh=None,
+    cfg_override: Optional[ModelConfig] = None,
+    probe: bool = True,
+) -> Tuple[Any, Any, Dict[str, Any]]:
+    """Lower + compile one cell; returns (lowered, compiled, record)."""
+    cfg = cfg_override or get_config(arch)
+    shape = SHAPES[shape_name]
+    ok, why = shape_applicable(cfg, shape)
+    if not ok:
+        raise ValueError(f"skipped cell: {why}")
+    mesh = mesh if mesh is not None else make_production_mesh(multi_pod=multi_pod)
+    chips = mesh.devices.size
+
+    t0 = time.time()
+    lowered, compiled, kind, params_struct = _lower_compile(cfg, shape, mesh)
+    t_compile = time.time() - t0
+
+    if probe:
+        flops, byts, coll = probe_costs(cfg, shape, mesh)
+    else:
+        flops, byts, coll = roofline.costs_of(compiled)
+
+    report = roofline.analyze(
+        arch=arch, shape_name=shape_name,
+        mesh_name="2x16x16" if multi_pod else "16x16", chips=chips,
+        cfg=cfg, shape=shape, params_tree=params_struct,
+        flops=flops, byts=byts, coll=coll, compiled=compiled)
+
+    ma = compiled.memory_analysis()
+    record = {
+        **report.as_dict(),
+        "kind": kind,
+        "fsdp": cfg.param_count() >= FSDP_THRESHOLD,
+        "compile_s": round(t_compile, 2),
+        "argument_bytes_per_device": int(ma.argument_size_in_bytes),
+        "temp_bytes_per_device": int(ma.temp_size_in_bytes),
+        "output_bytes_per_device": int(ma.output_size_in_bytes),
+        "alias_bytes_per_device": int(ma.alias_size_in_bytes),
+    }
+    return lowered, compiled, record
+
+
+def run_cells(cells, multipods, out_dir: Optional[str], probe: bool = True):
+    results = []
+    meshes = {mp: make_production_mesh(multi_pod=mp) for mp in multipods}
+    for arch, shape_name in cells:
+        cfg = get_config(arch)
+        shape = SHAPES[shape_name]
+        ok, why = shape_applicable(cfg, shape)
+        for mp in multipods:
+            mesh_name = "2x16x16" if mp else "16x16"
+            tag = f"{arch}__{shape_name}__{mesh_name}"
+            if not ok:
+                rec = {"arch": arch, "shape": shape_name, "mesh": mesh_name,
+                       "status": "SKIP", "reason": why}
+                print(f"[SKIP] {tag}: {why}")
+            else:
+                try:
+                    _, compiled, rec = lower_cell(arch, shape_name, mp, mesh=meshes[mp],
+                                                  probe=probe)
+                    rec["status"] = "OK"
+                    hbm = (rec["argument_bytes_per_device"] + rec["temp_bytes_per_device"]) / 1e9
+                    print(f"[OK]   {tag}: compile={rec['compile_s']}s "
+                          f"mem/dev={hbm:.2f}GB bottleneck={rec['bottleneck']} "
+                          f"useful={rec['useful_ratio']:.2f}")
+                    del compiled
+                except Exception as e:  # noqa
+                    rec = {"arch": arch, "shape": shape_name, "mesh": mesh_name,
+                           "status": "FAIL", "error": f"{type(e).__name__}: {e}",
+                           "trace": traceback.format_exc()[-2000:]}
+                    print(f"[FAIL] {tag}: {type(e).__name__}: {str(e)[:200]}")
+            results.append(rec)
+            if out_dir:
+                os.makedirs(out_dir, exist_ok=True)
+                with open(os.path.join(out_dir, tag + ".json"), "w") as f:
+                    json.dump(rec, f, indent=1, default=str)
+    return results
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default=None)
+    ap.add_argument("--shape", default=None)
+    ap.add_argument("--multipod", action="store_true", help="only the 512-chip mesh")
+    ap.add_argument("--multipod-too", action="store_true", help="both meshes")
+    ap.add_argument("--all", action="store_true")
+    ap.add_argument("--out", default="experiments/dryrun")
+    ap.add_argument("--no-probe", action="store_true",
+                    help="skip the flop-accounting probes (multi-pod proof runs)")
+    args = ap.parse_args()
+
+    if args.all:
+        cells = [(a, s) for a in ARCHS for s in SHAPES]
+    else:
+        assert args.arch and args.shape, "--arch and --shape (or --all)"
+        cells = [(args.arch, args.shape)]
+    multipods = [True] if args.multipod else ([False, True] if args.multipod_too else [False])
+    results = run_cells(cells, multipods, args.out, probe=not args.no_probe)
+    n_ok = sum(r.get("status") == "OK" for r in results)
+    n_skip = sum(r.get("status") == "SKIP" for r in results)
+    n_fail = sum(r.get("status") == "FAIL" for r in results)
+    print(f"\n=== dry-run: {n_ok} OK, {n_skip} SKIP, {n_fail} FAIL ===")
+    return 1 if n_fail else 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

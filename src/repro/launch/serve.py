@@ -1,0 +1,139 @@
+"""Serving driver: the fleet the GT-DRL control plane schedules.
+
+``ModelServer`` runs prefill + batched decode for one architecture (one
+"task type" in the paper's terms). ``Fleet`` stands up one server per task
+type per data center and exposes the throughput/power surface the paper's
+CWM needs (execution rates ER_{i,d} are tokens/s here — derived from the
+roofline for the TPU node type, measured for the CPU host).
+
+CPU-runnable: smoke configs, small batches (see examples/serve_fleet.py).
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+import time
+from typing import Any, Dict, List, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from ..configs import get_config
+from ..configs.base import ModelConfig
+from ..models import model as model_lib
+from ..train.step import decode_step, prefill_step
+
+
+@dataclasses.dataclass
+class Request:
+    uid: int
+    prompt: jnp.ndarray  # (S,) int32
+    max_new: int = 16
+
+
+class ModelServer:
+    """Single-arch server: continuous batching over a fixed decode batch."""
+
+    def __init__(self, cfg: ModelConfig, *, batch_size: int = 8,
+                 cache_len: int = 512, seed: int = 0):
+        self.cfg = cfg
+        self.batch_size = batch_size
+        self.cache_len = cache_len
+        self.params = model_lib.init(jax.random.PRNGKey(seed), cfg)
+        self._prefill = jax.jit(functools.partial(
+            prefill_step, cfg=cfg, cache_len=cache_len))
+        self._decode = jax.jit(functools.partial(decode_step, cfg=cfg),
+                               donate_argnums=(3,))
+        self.stats = {"requests": 0, "tokens": 0, "decode_s": 0.0, "prefill_s": 0.0}
+
+    def _batchify(self, reqs: List[Request]) -> Dict[str, jnp.ndarray]:
+        maxlen = max(int(r.prompt.shape[0]) for r in reqs)
+        toks = jnp.stack([
+            jnp.pad(r.prompt, (0, maxlen - r.prompt.shape[0])) for r in reqs])
+        batch = {"tokens": toks.astype(jnp.int32)}
+        if self.cfg.rope_mode == "mrope":
+            b, s = toks.shape
+            batch["positions"] = jnp.broadcast_to(
+                jnp.arange(s, dtype=jnp.int32)[None, :, None], (b, s, 3))
+        if self.cfg.is_encoder_decoder:
+            batch["frames"] = jnp.zeros(
+                (len(reqs), self.cfg.encoder_seq, self.cfg.d_model), jnp.float32)
+        return batch
+
+    def generate(self, reqs: List[Request], greedy: bool = True) -> Dict[int, List[int]]:
+        """Prefill all prompts, then decode max_new tokens, batched."""
+        assert len(reqs) <= self.batch_size
+        batch = self._batchify(reqs)
+        b, s = batch["tokens"].shape
+        t0 = time.time()
+        logits, cache = self._prefill(self.params, batch)
+        self.stats["prefill_s"] += time.time() - t0
+        token = jnp.argmax(logits[:, -1:], axis=-1).astype(jnp.int32)
+        outs: Dict[int, List[int]] = {r.uid: [] for r in reqs}
+        max_new = max(r.max_new for r in reqs)
+        t0 = time.time()
+        for step in range(max_new):
+            # the token produced by the previous pass (prefill for step 0)
+            # IS generation `step`; decode then advances the cache past it
+            for i, r in enumerate(reqs):
+                if step < r.max_new:
+                    outs[r.uid].append(int(token[i, 0]))
+            if step == max_new - 1:
+                break
+            pos = jnp.full((b, 1), s + step, jnp.int32)
+            if self.cfg.rope_mode == "mrope":
+                pos = jnp.broadcast_to(pos[..., None], (b, 1, 3))
+            logits, cache = self._decode(self.params, token, pos, cache)
+            token = jnp.argmax(logits, axis=-1).astype(jnp.int32)[:, :1]
+        self.stats["decode_s"] += time.time() - t0
+        self.stats["requests"] += len(reqs)
+        self.stats["tokens"] += b * max_new
+        return outs
+
+    def tokens_per_second(self) -> float:
+        t = self.stats["decode_s"]
+        return self.stats["tokens"] / t if t > 0 else 0.0
+
+
+class Fleet:
+    """The serving fleet behind the paper's CWM: task types × data centers.
+
+    ``route(assignments)`` takes the GT-DRL arrival-rate matrix AR[i, d]
+    (requests/hour) and dispatches batches accordingly — the actual data
+    plane the control plane's decisions act on.
+    """
+
+    def __init__(self, archs: List[str], num_dcs: int, *, smoke: bool = True,
+                 batch_size: int = 4, cache_len: int = 128):
+        self.archs = archs
+        self.num_dcs = num_dcs
+        self.servers: Dict[Tuple[int, int], ModelServer] = {}
+        for i, a in enumerate(archs):
+            cfg = get_config(a)
+            cfg = cfg.smoke() if smoke else cfg
+            for d in range(num_dcs):
+                self.servers[(i, d)] = ModelServer(
+                    cfg, batch_size=batch_size, cache_len=cache_len, seed=i * 97 + d)
+
+    def route(self, ar: jnp.ndarray, requests_per_unit: int = 1,
+              prompt_len: int = 16, max_new: int = 4) -> Dict[str, Any]:
+        """Dispatch a scaled-down sample of the assignment matrix."""
+        ar = jnp.asarray(ar)
+        share = ar / jnp.maximum(jnp.sum(ar), 1e-9)
+        uid = 0
+        dispatched = {}
+        for i in range(len(self.archs)):
+            for d in range(self.num_dcs):
+                n = int(round(float(share[i, d]) * requests_per_unit * len(self.archs) * self.num_dcs))
+                n = min(n, self.servers[(i, d)].batch_size)
+                if n <= 0:
+                    continue
+                reqs = [Request(uid + k, jnp.ones((prompt_len,), jnp.int32), max_new)
+                        for k in range(n)]
+                uid += n
+                self.servers[(i, d)].generate(reqs)
+                dispatched[(i, d)] = n
+        return {"dispatched": dispatched,
+                "total": sum(dispatched.values()),
+                "per_server_tps": {k: s.tokens_per_second()
+                                   for k, s in self.servers.items() if s.stats["tokens"]}}

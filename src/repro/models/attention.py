@@ -1,0 +1,195 @@
+"""GQA self-attention and cross-attention blocks (train / prefill / decode).
+
+The attention core routes through ``repro.kernels.ops`` so the Pallas flash
+kernels are used on TPU and the jnp oracle on CPU. KV caches are explicit
+pytrees threaded by the caller (see ``models/kvcache.py``).
+"""
+from __future__ import annotations
+
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from ..distributed.sharding import constrain
+from ..kernels import ops
+from .layers import Params, apply_mrope, apply_rope, dense, dense_init
+
+
+def attn_init(key, cfg, d_model: Optional[int] = None) -> Params:
+    d = d_model or cfg.d_model
+    qd, kvd = cfg.q_dim(), cfg.kv_dim()
+    ks = jax.random.split(key, 4)
+    dt = _pdtype(cfg)
+    return {
+        "wq": dense_init(ks[0], d, qd, dt, bias=cfg.qkv_bias),
+        "wk": dense_init(ks[1], d, kvd, dt, bias=cfg.qkv_bias),
+        "wv": dense_init(ks[2], d, kvd, dt, bias=cfg.qkv_bias),
+        "wo": dense_init(ks[3], qd, d, dt, bias=False, scale=1.0 / max(1, cfg.num_layers) ** 0.5),
+    }
+
+
+def _pdtype(cfg):
+    import jax.numpy as _jnp
+
+    return {"bfloat16": _jnp.bfloat16, "float32": _jnp.float32}[cfg.param_dtype]
+
+
+def _apply_positional(cfg, q, k, positions):
+    if cfg.rope_mode == "rope":
+        q = apply_rope(q, positions, cfg.rope_theta)
+        k = apply_rope(k, positions, cfg.rope_theta)
+    elif cfg.rope_mode == "mrope":
+        q = apply_mrope(q, positions, cfg.rope_theta, cfg.mrope_sections)
+        k = apply_mrope(k, positions, cfg.rope_theta, cfg.mrope_sections)
+    return q, k
+
+
+def attn_apply(
+    p: Params,
+    cfg,
+    x: jnp.ndarray,  # (B, S, D)
+    positions: jnp.ndarray,  # (B, S) or (B, S, 3) for mrope
+    *,
+    causal: bool = True,
+    window: int = 0,
+    impl: str = "auto",
+) -> jnp.ndarray:
+    """Full-sequence self attention (training / prefill)."""
+    b, s, _ = x.shape
+    hd = cfg.hd()
+    q = dense(p["wq"], x).reshape(b, s, cfg.num_heads, hd)
+    k = dense(p["wk"], x).reshape(b, s, cfg.num_kv_heads, hd)
+    v = dense(p["wv"], x).reshape(b, s, cfg.num_kv_heads, hd)
+    q, k = _apply_positional(cfg, q, k, positions)
+    if cfg.act_shard == "seq":
+        # sequence parallelism: q stays seq-sharded (each shard owns a span
+        # of query rows); K/V are gathered across "model" — tiny under GQA
+        # (kv_heads ≪ heads). Attention output stays seq-sharded, so no
+        # layout thrash against the seq-sharded residual stream.
+        q = constrain(q, ("pod", "data"), "model", None, None)
+        k = constrain(k, ("pod", "data"), None, None, None)
+        v = constrain(v, ("pod", "data"), None, None, None)
+    else:
+        q = constrain(q, ("pod", "data"), None, "model", None)
+        k = constrain(k, ("pod", "data"), None, "model", None)
+    o = ops.attention(
+        q, k, v, causal=causal, window=window,
+        softcap=cfg.attn_logit_softcap, impl=impl,
+    )
+    o = o.reshape(b, s, cfg.q_dim())
+    return dense(p["wo"], o)
+
+
+def attn_prefill(
+    p: Params, cfg, x, positions, cache: Dict[str, Any], *,
+    causal: bool = True, window: int = 0, impl: str = "auto",
+) -> Tuple[jnp.ndarray, Dict[str, Any]]:
+    """Prefill: same as train but also fills the KV cache."""
+    b, s, _ = x.shape
+    hd = cfg.hd()
+    q = dense(p["wq"], x).reshape(b, s, cfg.num_heads, hd)
+    k = dense(p["wk"], x).reshape(b, s, cfg.num_kv_heads, hd)
+    v = dense(p["wv"], x).reshape(b, s, cfg.num_kv_heads, hd)
+    q, k = _apply_positional(cfg, q, k, positions)
+    o = ops.attention(
+        q, k, v, causal=causal, window=window,
+        softcap=cfg.attn_logit_softcap, impl=impl,
+    )
+    o = o.reshape(b, s, cfg.q_dim())
+    new_cache = _cache_write_prefill(cache, k, v, s)
+    return dense(p["wo"], o), new_cache
+
+
+def attn_decode(
+    p: Params, cfg, x, positions, cache: Dict[str, Any], *,
+    window: int = 0, impl: str = "auto",
+) -> Tuple[jnp.ndarray, Dict[str, Any]]:
+    """One-token decode against the cache.
+
+    x: (B, 1, D); cache holds k/v (B, S, KVH, hd) and pos (B,) int32 valid
+    lengths. For sliding-window layers the cache length is the window and
+    writes wrap (rolling buffer).
+    """
+    b, s1, _ = x.shape
+    assert s1 == 1
+    hd = cfg.hd()
+    q = dense(p["wq"], x).reshape(b, 1, cfg.num_heads, hd)
+    k = dense(p["wk"], x).reshape(b, 1, cfg.num_kv_heads, hd)
+    v = dense(p["wv"], x).reshape(b, 1, cfg.num_kv_heads, hd)
+    q, k = _apply_positional(cfg, q, k, positions)
+
+    cache_len = cache["k"].shape[1]
+    pos = cache["pos"]  # scalar int32: synchronized decode position
+    if window > 0:
+        slot = jnp.mod(pos, cache_len)
+    else:
+        slot = jnp.minimum(pos, cache_len - 1)
+    k_cache = _write_slot(cache["k"], k[:, 0], slot)
+    v_cache = _write_slot(cache["v"], v[:, 0], slot)
+    lengths = jnp.broadcast_to(jnp.minimum(pos + 1, cache_len), (b,))
+    o = ops.decode_attention(
+        q[:, 0], k_cache, v_cache, lengths,
+        softcap=cfg.attn_logit_softcap, impl=impl,
+    )  # (B, H, hd)
+    o = o.reshape(b, 1, cfg.q_dim())
+    new_cache = {"k": k_cache, "v": v_cache, "pos": pos + 1}
+    return dense(p["wo"], o), new_cache
+
+
+def cross_attn_apply(
+    p: Params, cfg, x, enc_kv: Tuple[jnp.ndarray, jnp.ndarray], *, impl: str = "auto"
+) -> jnp.ndarray:
+    """Encoder-decoder cross attention; enc_kv are precomputed (B,Se,KVH,hd)."""
+    b, s, _ = x.shape
+    hd = cfg.hd()
+    q = dense(p["wq"], x).reshape(b, s, cfg.num_heads, hd)
+    k, v = enc_kv
+    o = ops.attention(q, k, v, causal=False, window=0, impl=impl)
+    o = o.reshape(b, s, cfg.q_dim())
+    return dense(p["wo"], o)
+
+
+def cross_kv(p: Params, cfg, enc_out: jnp.ndarray) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    b, se, _ = enc_out.shape
+    hd = cfg.hd()
+    k = dense(p["wk"], enc_out).reshape(b, se, cfg.num_kv_heads, hd)
+    v = dense(p["wv"], enc_out).reshape(b, se, cfg.num_kv_heads, hd)
+    return k, v
+
+
+# ---------------------------------------------------------------------------
+# cache plumbing
+# ---------------------------------------------------------------------------
+
+def _write_slot(cache: jnp.ndarray, new: jnp.ndarray, slot: jnp.ndarray) -> jnp.ndarray:
+    """Write (B, KVH, hd) ``new`` at the (scalar) synchronized position.
+
+    A *scalar*-index dynamic_update_slice is the key to a partitionable
+    decode step: per-sequence scatter indices force GSPMD into "involuntary
+    full rematerialization" (it replicates the whole cache every token —
+    measured as the collective bottleneck of every decode cell); a uniform
+    slot updates each shard locally with zero collective traffic. Batched
+    serving decodes synchronized positions anyway (padded prompts).
+    """
+    return jax.lax.dynamic_update_slice(
+        cache, new[:, None].astype(cache.dtype), (0, slot, 0, 0))
+
+
+def _cache_write_prefill(cache: Dict[str, Any], k, v, s: int) -> Dict[str, Any]:
+    cache_len = cache["k"].shape[1]
+    if s >= cache_len:
+        # ring alignment: decode writes position p at slot p % cache_len, so
+        # the kept tail [s-L, s) must land with position p at slot p % L.
+        k_new = jnp.roll(k[:, -cache_len:], shift=s % cache_len, axis=1)
+        v_new = jnp.roll(v[:, -cache_len:], shift=s % cache_len, axis=1)
+    else:
+        pad = cache_len - s
+        k_new = jnp.pad(k, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        v_new = jnp.pad(v, ((0, 0), (0, pad), (0, 0), (0, 0)))
+    b = k.shape[0]
+    return {
+        "k": k_new.astype(cache["k"].dtype),
+        "v": v_new.astype(cache["v"].dtype),
+        "pos": jnp.int32(s),
+    }

@@ -1,0 +1,133 @@
+"""Whisper-style encoder-decoder backbone.
+
+The audio conv frontend is a stub per the assignment: the model consumes
+precomputed frame embeddings (B, Se, D) from ``input_specs()``. Encoder =
+non-causal self-attention blocks with sinusoidal positions; decoder = causal
+self-attention + cross-attention blocks with learned positions. LayerNorm +
+GELU (Whisper convention).
+"""
+from __future__ import annotations
+
+from typing import Any, Dict, List, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from . import attention as attn
+from .layers import Params, apply_norm, dense_init, embed, embed_init, norm_init, sinusoidal_positions, unembed
+from .mlp import mlp_apply, mlp_init
+from .transformer import _attn_cache_init
+
+
+def _pdt(cfg):
+    return {"bfloat16": jnp.bfloat16, "float32": jnp.float32}[cfg.param_dtype]
+
+
+def enc_block_init(key, cfg) -> Params:
+    ks = jax.random.split(key, 2)
+    dt = _pdt(cfg)
+    return {
+        "norm1": norm_init(cfg.d_model, cfg.norm, dt),
+        "attn": attn.attn_init(ks[0], cfg),
+        "norm2": norm_init(cfg.d_model, cfg.norm, dt),
+        "mlp": mlp_init(ks[1], cfg),
+    }
+
+
+def dec_block_init(key, cfg) -> Params:
+    ks = jax.random.split(key, 3)
+    dt = _pdt(cfg)
+    return {
+        "norm1": norm_init(cfg.d_model, cfg.norm, dt),
+        "self_attn": attn.attn_init(ks[0], cfg),
+        "norm_x": norm_init(cfg.d_model, cfg.norm, dt),
+        "cross_attn": attn.attn_init(ks[1], cfg),
+        "norm2": norm_init(cfg.d_model, cfg.norm, dt),
+        "mlp": mlp_init(ks[2], cfg),
+    }
+
+
+def encdec_init(key, cfg) -> Params:
+    ks = jax.random.split(key, 4 + cfg.num_encoder_layers + cfg.num_layers)
+    dt = _pdt(cfg)
+    p: Params = {
+        "embed": embed_init(ks[0], cfg.vocab_size, cfg.d_model, dt),
+        "pos_embed": {"w": (jax.random.normal(ks[1], (4096, cfg.d_model), jnp.float32) * 0.01).astype(dt)},
+        "enc": {str(i): enc_block_init(ks[4 + i], cfg) for i in range(cfg.num_encoder_layers)},
+        "enc_norm": norm_init(cfg.d_model, cfg.norm, dt),
+        "dec": {
+            str(i): dec_block_init(ks[4 + cfg.num_encoder_layers + i], cfg)
+            for i in range(cfg.num_layers)
+        },
+        "dec_norm": norm_init(cfg.d_model, cfg.norm, dt),
+    }
+    return p
+
+
+def encode(p: Params, cfg, frames: jnp.ndarray) -> jnp.ndarray:
+    """frames: (B, Se, D) stubbed conv-frontend output."""
+    se = frames.shape[1]
+    x = frames + sinusoidal_positions(se, cfg.d_model).astype(frames.dtype)
+    for i in range(cfg.num_encoder_layers):
+        bp = p["enc"][str(i)]
+        h = apply_norm(bp["norm1"], x, cfg.norm)
+        x = x + attn.attn_apply(bp["attn"], cfg, h, jnp.zeros(h.shape[:2], jnp.int32), causal=False)
+        x = x + mlp_apply(bp["mlp"], cfg, apply_norm(bp["norm2"], x, cfg.norm))
+    return apply_norm(p["enc_norm"], x, cfg.norm)
+
+
+def _dec_positions(cfg, tokens):
+    b, s = tokens.shape
+    return jnp.broadcast_to(jnp.arange(s)[None], (b, s))
+
+
+def decode_train(p: Params, cfg, tokens: jnp.ndarray, enc_out: jnp.ndarray) -> jnp.ndarray:
+    b, s = tokens.shape
+    pos = _dec_positions(cfg, tokens)
+    x = embed(p["embed"], tokens)
+    # learned positions (table sized >= max training seq; take mod for safety)
+    x = x + jnp.take(p["pos_embed"]["w"], jnp.mod(pos, p["pos_embed"]["w"].shape[0]), axis=0)
+    for i in range(cfg.num_layers):
+        bp = p["dec"][str(i)]
+        h = apply_norm(bp["norm1"], x, cfg.norm)
+        x = x + attn.attn_apply(bp["self_attn"], cfg, h, pos, causal=True)
+        hx = apply_norm(bp["norm_x"], x, cfg.norm)
+        kv = attn.cross_kv(bp["cross_attn"], cfg, enc_out)
+        x = x + attn.cross_attn_apply(bp["cross_attn"], cfg, hx, kv)
+        x = x + mlp_apply(bp["mlp"], cfg, apply_norm(bp["norm2"], x, cfg.norm))
+    x = apply_norm(p["dec_norm"], x, cfg.norm)
+    return unembed(p["embed"], x)
+
+
+def init_dec_cache(p: Params, cfg, enc_out: jnp.ndarray, batch: int, cache_len: int, dtype):
+    """Self-attn KV caches + precomputed cross-attn KV per layer."""
+    caches: List[Dict[str, Any]] = []
+    for i in range(cfg.num_layers):
+        bp = p["dec"][str(i)]
+        k, v = attn.cross_kv(bp["cross_attn"], cfg, enc_out)
+        caches.append({
+            "self": _attn_cache_init(cfg, batch, cache_len, dtype),
+            "cross_k": k.astype(dtype),
+            "cross_v": v.astype(dtype),
+        })
+    return caches
+
+
+def decode_step(p: Params, cfg, token: jnp.ndarray, positions: jnp.ndarray, caches):
+    """token: (B, 1); positions: (B, 1) absolute decoder positions."""
+    x = embed(p["embed"], token)
+    x = x + jnp.take(p["pos_embed"]["w"], jnp.mod(positions, p["pos_embed"]["w"].shape[0]), axis=0)
+    new_caches = []
+    for i in range(cfg.num_layers):
+        bp = p["dec"][str(i)]
+        h = apply_norm(bp["norm1"], x, cfg.norm)
+        y, self_cache = attn.attn_decode(bp["self_attn"], cfg, h, positions, caches[i]["self"])
+        x = x + y
+        hx = apply_norm(bp["norm_x"], x, cfg.norm)
+        x = x + attn.cross_attn_apply(
+            bp["cross_attn"], cfg, hx, (caches[i]["cross_k"], caches[i]["cross_v"])
+        )
+        x = x + mlp_apply(bp["mlp"], cfg, apply_norm(bp["norm2"], x, cfg.norm))
+        new_caches.append(dict(caches[i], self=self_cache))
+    x = apply_norm(p["dec_norm"], x, cfg.norm)
+    return unembed(p["embed"], x), new_caches

@@ -1,0 +1,153 @@
+"""Core layers: initialization helpers, norms, embeddings, RoPE / M-RoPE.
+
+The module system is deliberately tiny: a "module" is a pair of pure
+functions ``init(key, ...) -> params`` and ``apply(params, x, ...) -> y``
+over nested-dict pytrees. No global state; dtype policy comes from the
+``ModelConfig``.
+"""
+from __future__ import annotations
+
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+Params = Dict[str, Any]
+
+
+def _dtype(name: str):
+    return {"bfloat16": jnp.bfloat16, "float32": jnp.float32, "float16": jnp.float16}[name]
+
+
+# ---------------------------------------------------------------------------
+# Param init
+# ---------------------------------------------------------------------------
+
+def dense_init(key, d_in: int, d_out: int, dtype, bias: bool = False, scale: float = 1.0) -> Params:
+    """Truncated-normal fan-in init (matches common LM practice)."""
+    std = scale / (d_in ** 0.5)
+    w = (jax.random.truncated_normal(key, -2.0, 2.0, (d_in, d_out), jnp.float32) * std)
+    p: Params = {"w": w.astype(dtype)}
+    if bias:
+        p["b"] = jnp.zeros((d_out,), dtype)
+    return p
+
+
+def dense(p: Params, x: jnp.ndarray) -> jnp.ndarray:
+    y = x @ p["w"]
+    if "b" in p:
+        y = y + p["b"]
+    return y
+
+
+def embed_init(key, vocab: int, d: int, dtype) -> Params:
+    w = jax.random.normal(key, (vocab, d), jnp.float32) * (d ** -0.5)
+    return {"w": w.astype(dtype)}
+
+
+def embed(p: Params, ids: jnp.ndarray) -> jnp.ndarray:
+    return jnp.take(p["w"], ids, axis=0)
+
+
+def unembed(p: Params, x: jnp.ndarray) -> jnp.ndarray:
+    """Project hidden states to logits with the (possibly tied) table."""
+    return x @ p["w"].T
+
+
+# ---------------------------------------------------------------------------
+# Norms
+# ---------------------------------------------------------------------------
+
+def norm_init(d: int, kind: str, dtype) -> Params:
+    p: Params = {"scale": jnp.ones((d,), dtype)}
+    if kind == "layernorm":
+        p["bias"] = jnp.zeros((d,), dtype)
+    return p
+
+
+def apply_norm(p: Params, x: jnp.ndarray, kind: str, eps: float = 1e-6) -> jnp.ndarray:
+    xf = x.astype(jnp.float32)
+    if kind == "rmsnorm":
+        var = jnp.mean(xf * xf, axis=-1, keepdims=True)
+        y = xf * jax.lax.rsqrt(var + eps)
+    else:  # layernorm
+        mu = jnp.mean(xf, axis=-1, keepdims=True)
+        var = jnp.var(xf, axis=-1, keepdims=True)
+        y = (xf - mu) * jax.lax.rsqrt(var + eps)
+    y = y * p["scale"].astype(jnp.float32)
+    if "bias" in p:
+        y = y + p["bias"].astype(jnp.float32)
+    return y.astype(x.dtype)
+
+
+# ---------------------------------------------------------------------------
+# Rotary embeddings (standard + multimodal M-RoPE)
+# ---------------------------------------------------------------------------
+
+def rope_freqs(head_dim: int, theta: float) -> jnp.ndarray:
+    """Inverse frequencies, shape (head_dim // 2,)."""
+    return 1.0 / (theta ** (jnp.arange(0, head_dim, 2, dtype=jnp.float32) / head_dim))
+
+
+def apply_rope(x: jnp.ndarray, positions: jnp.ndarray, theta: float) -> jnp.ndarray:
+    """Standard RoPE.
+
+    x: (..., seq, heads, head_dim); positions: broadcastable to (..., seq).
+    """
+    hd = x.shape[-1]
+    inv = rope_freqs(hd, theta)  # (hd/2,)
+    ang = positions[..., None].astype(jnp.float32) * inv  # (..., seq, hd/2)
+    sin, cos = jnp.sin(ang), jnp.cos(ang)
+    sin = sin[..., None, :]  # broadcast over heads
+    cos = cos[..., None, :]
+    x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x2 * cos + x1 * sin], axis=-1)
+    return out.astype(x.dtype)
+
+
+def apply_mrope(
+    x: jnp.ndarray,
+    positions: jnp.ndarray,
+    theta: float,
+    sections: Tuple[int, ...],
+) -> jnp.ndarray:
+    """Multimodal RoPE (Qwen2-VL): three position streams (t, h, w) rotate
+    disjoint sections of the head dim.
+
+    x: (..., seq, heads, head_dim); positions: (..., seq, 3) integer ids.
+    ``sections`` are sizes in *pairs* summing to head_dim // 2.
+    """
+    hd = x.shape[-1]
+    assert sum(sections) == hd // 2, (sections, hd)
+    inv = rope_freqs(hd, theta)  # (hd/2,)
+    # Select which position stream drives each frequency pair.
+    sec_id = jnp.repeat(jnp.arange(len(sections)), jnp.array(sections), total_repeat_length=hd // 2)
+    pos = jnp.take_along_axis(
+        positions.astype(jnp.float32),  # (..., seq, 3)
+        jnp.broadcast_to(sec_id, positions.shape[:-1] + (hd // 2,)).astype(jnp.int32),
+        axis=-1,
+    )  # (..., seq, hd/2)
+    ang = pos * inv
+    sin, cos = jnp.sin(ang)[..., None, :], jnp.cos(ang)[..., None, :]
+    x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x2 * cos + x1 * sin], axis=-1)
+    return out.astype(x.dtype)
+
+
+def sinusoidal_positions(seq: int, d: int) -> jnp.ndarray:
+    """Whisper-style fixed sinusoidal embeddings, shape (seq, d)."""
+    pos = jnp.arange(seq, dtype=jnp.float32)[:, None]
+    div = jnp.exp(-jnp.log(10000.0) * jnp.arange(0, d, 2, dtype=jnp.float32) / d)
+    ang = pos * div
+    pe = jnp.zeros((seq, d), jnp.float32)
+    pe = pe.at[:, 0::2].set(jnp.sin(ang))
+    pe = pe.at[:, 1::2].set(jnp.cos(ang))
+    return pe
+
+
+def activation(name: str):
+    return {"silu": jax.nn.silu, "gelu": jax.nn.gelu, "geglu": jax.nn.gelu,
+            "relu": jax.nn.relu}[name]
+
+
+GATED_ACTS = ("silu", "geglu")  # SwiGLU / GeGLU

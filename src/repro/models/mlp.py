@@ -1,0 +1,39 @@
+"""Feed-forward blocks: SwiGLU (silu) and plain GELU MLP."""
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from ..distributed.sharding import constrain
+from .layers import GATED_ACTS, Params, activation, dense, dense_init
+
+
+def mlp_init(key, cfg, d_ff: Optional[int] = None, d_model: Optional[int] = None) -> Params:
+    d = d_model or cfg.d_model
+    f = d_ff if d_ff is not None else cfg.d_ff
+    dt = {"bfloat16": jnp.bfloat16, "float32": jnp.float32}[cfg.param_dtype]
+    ks = jax.random.split(key, 3)
+    p: Params = {
+        "w_in": dense_init(ks[0], d, f, dt),
+        "w_out": dense_init(ks[1], f, d, dt, scale=1.0 / max(1, cfg.num_layers) ** 0.5),
+    }
+    if cfg.act in GATED_ACTS:
+        p["w_gate"] = dense_init(ks[2], d, f, dt)
+    return p
+
+
+def mlp_apply(p: Params, cfg, x: jnp.ndarray) -> jnp.ndarray:
+    act = activation(cfg.act)
+    h = dense(p["w_in"], x)
+    if "w_gate" in p:
+        h = act(dense(p["w_gate"], x)) * h
+    else:
+        h = act(h)
+    if getattr(cfg, "act_shard", "none") == "seq" and h.ndim == 3:
+        # sequence parallelism: the FFN is token-local — keep tokens sharded
+        h = constrain(h, ("pod", "data"), "model", None)
+    else:
+        h = constrain(h, ("pod", "data"), None, "model")
+    return dense(p["w_out"], h)

@@ -1,0 +1,117 @@
+"""RG-LRU recurrent block (RecurrentGemma / Griffin, arXiv:2402.19427).
+
+The recurrence  h_t = a_t ⊙ h_{t-1} + sqrt(1 - a_t²) ⊙ (i_t ⊙ x_t)  with
+a_t = exp(-c · softplus(Λ) · σ(W_r x_t))  is a first-order linear scan:
+train/prefill use `jax.lax.associative_scan` (log-depth, TPU-friendly),
+decode is an O(1) update — which is what makes the 0.5M-token long-context
+cell runnable for this architecture.
+
+Block layout (Griffin recurrent block): pre-norm → {gate branch: linear+GeLU}
+⊙ {recurrent branch: linear → causal conv(4) → RG-LRU} → output linear.
+"""
+from __future__ import annotations
+
+import math
+from typing import Any, Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from .layers import Params, dense, dense_init
+from .xlstm import _causal_conv, _conv_step, conv_tail_buffer
+
+A_SCALE = 8.0  # the paper's c constant
+
+
+def rglru_init(key, cfg) -> Params:
+    d = cfg.d_model
+    w = cfg.lru_width or d
+    dt = {"bfloat16": jnp.bfloat16, "float32": jnp.float32}[cfg.param_dtype]
+    ks = jax.random.split(key, 6)
+    # Λ init so that a^c spans roughly (0.9, 0.999) as in the paper
+    u = jax.random.uniform(ks[0], (w,), jnp.float32, 0.9, 0.999)
+    lam = jnp.log(jnp.expm1(-jnp.log(u) / A_SCALE))  # softplus^-1
+    return {
+        "w_x": dense_init(ks[1], d, w, dt),
+        "w_gate_branch": dense_init(ks[2], d, w, dt),
+        "conv": {"w": jax.random.normal(ks[3], (cfg.conv_width, w), jnp.float32).astype(dt) * 0.1},
+        "w_rec_gate": dense_init(ks[4], w, 2 * w, jnp.float32, bias=True),  # r and i gates
+        "lambda": lam,
+        "w_out": dense_init(ks[5], w, d, dt, scale=1.0 / max(1, cfg.num_layers) ** 0.5),
+    }
+
+
+def _gates(p: Params, xw: jnp.ndarray) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """Recurrence (r) and input (i) gates + log coefficient.
+
+    xw: (..., w) the post-conv recurrent-branch activations (fp32 math).
+    Returns (log_a, gated_input) with log_a = -c·softplus(Λ)·σ(r).
+    """
+    g = dense(p["w_rec_gate"], xw.astype(jnp.float32))
+    w = xw.shape[-1]
+    r, i = g[..., :w], g[..., w:]
+    log_a = -A_SCALE * jax.nn.softplus(p["lambda"]) * jax.nn.sigmoid(r)
+    gated = jax.nn.sigmoid(i) * xw.astype(jnp.float32)
+    # multiplier sqrt(1 - a^2), computed stably via log1p(-exp(2 log a))
+    mult = jnp.sqrt(-jnp.expm1(2.0 * log_a))
+    return log_a, mult * gated
+
+
+def rglru_scan(log_a: jnp.ndarray, b: jnp.ndarray, h0=None) -> jnp.ndarray:
+    """Associative scan for h_t = a_t h_{t-1} + b_t over axis 1.
+
+    log_a, b: (B, S, W) fp32. h0: optional (B, W) entering state.
+    """
+    a = jnp.exp(log_a)
+    if h0 is not None:
+        b = b.at[:, 0].add(a[:, 0] * h0)
+
+    def combine(x, y):
+        a1, b1 = x
+        a2, b2 = y
+        return a1 * a2, a2 * b1 + b2
+
+    _, h = jax.lax.associative_scan(combine, (a, b), axis=1)
+    return h
+
+
+def rglru_apply(p: Params, cfg, x: jnp.ndarray, state=None, return_state: bool = False):
+    """Full-sequence Griffin recurrent block body. x (B,S,D)."""
+    gate = jax.nn.gelu(dense(p["w_gate_branch"], x))
+    xr = dense(p["w_x"], x)
+    conv = _causal_conv(xr, p["conv"]["w"])
+    log_a, binp = _gates(p, conv)
+    h0 = state["h"] if state is not None else None
+    h = rglru_scan(log_a, binp, h0=h0).astype(x.dtype)
+    y = dense(p["w_out"], h * gate)
+    if return_state:
+        new_state = {
+            "h": rglru_final_state(log_a, binp, h),
+            "conv_buf": conv_tail_buffer(xr, p["conv"]["w"].shape[0]),
+        }
+        return y, new_state
+    return y
+
+
+def rglru_final_state(log_a, binp, h) -> jnp.ndarray:
+    return h[:, -1].astype(jnp.float32)
+
+
+def rglru_decode(p: Params, cfg, x_t: jnp.ndarray, state: Dict[str, Any]):
+    """One-token step. x_t (B,1,D); state {h (B,W) fp32, conv_buf}."""
+    xt = x_t[:, 0]
+    gate = jax.nn.gelu(dense(p["w_gate_branch"], xt))
+    xr = dense(p["w_x"], xt)
+    conv_out, conv_buf = _conv_step(xr, p["conv"]["w"], state["conv_buf"])
+    log_a, binp = _gates(p, conv_out)
+    h_new = jnp.exp(log_a) * state["h"] + binp
+    y = dense(p["w_out"], (h_new.astype(x_t.dtype) * gate))[:, None]
+    return y, {"h": h_new, "conv_buf": conv_buf}
+
+
+def rglru_state_init(cfg, batch: int, dtype=jnp.float32) -> Dict[str, jnp.ndarray]:
+    w = cfg.lru_width or cfg.d_model
+    return {
+        "h": jnp.zeros((batch, w), jnp.float32),
+        "conv_buf": jnp.zeros((batch, cfg.conv_width - 1, w), dtype),
+    }

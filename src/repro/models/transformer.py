@@ -1,0 +1,293 @@
+"""Decoder-only LM assembly: mixed block kinds, layer-scan + remat, caches.
+
+Uniform-attention architectures (all dense + MoE LMs) stack their layers as
+a scanned pytree — `jax.lax.scan` over stacked params keeps the HLO O(1) in
+depth and composes with `jax.checkpoint` for remat. Hybrid/SSM architectures
+(xLSTM, RecurrentGemma) have heterogeneous per-layer params and are unrolled
+(12–38 layers: small HLO either way).
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any, Dict, List, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from ..configs.base import ATTN, MLSTM, RECUR, SLSTM
+from ..distributed.sharding import constrain
+from . import attention as attn
+from . import moe as moe_mod
+from .layers import Params, apply_norm, norm_init
+from .mlp import mlp_apply, mlp_init
+from .rglru import rglru_apply, rglru_decode, rglru_init, rglru_state_init
+from .xlstm import (
+    mlstm_apply,
+    mlstm_decode,
+    mlstm_init,
+    mlstm_state_init,
+    slstm_apply,
+    slstm_decode,
+    slstm_init,
+    slstm_state_init,
+)
+
+
+def _dt(cfg):
+    return {"bfloat16": jnp.bfloat16, "float32": jnp.float32}[cfg.dtype]
+
+
+# ---------------------------------------------------------------------------
+# single block
+# ---------------------------------------------------------------------------
+
+def block_init(key, cfg, kind: str) -> Params:
+    ks = jax.random.split(key, 4)
+    pdt = {"bfloat16": jnp.bfloat16, "float32": jnp.float32}[cfg.param_dtype]
+    p: Params = {"norm1": norm_init(cfg.d_model, cfg.norm, pdt)}
+    if kind == ATTN:
+        p["attn"] = attn.attn_init(ks[0], cfg)
+        p["norm2"] = norm_init(cfg.d_model, cfg.norm, pdt)
+        if cfg.num_experts:
+            p["moe"] = moe_mod.moe_init(ks[1], cfg)
+        elif cfg.d_ff:
+            p["mlp"] = mlp_init(ks[1], cfg)
+    elif kind == RECUR:
+        p["recur"] = rglru_init(ks[0], cfg)
+        if cfg.d_ff:
+            p["norm2"] = norm_init(cfg.d_model, cfg.norm, pdt)
+            p["mlp"] = mlp_init(ks[1], cfg)
+    elif kind == MLSTM:
+        p["mlstm"] = mlstm_init(ks[0], cfg)
+    elif kind == SLSTM:
+        p["slstm"] = slstm_init(ks[0], cfg)
+    else:  # pragma: no cover
+        raise ValueError(kind)
+    return p
+
+
+def _layer_window(cfg, kind: str) -> int:
+    # hybrid archs use windowed local attention for their ATTN layers
+    return cfg.attn_window if kind == ATTN else 0
+
+
+def block_apply(
+    p: Params, cfg, kind: str, x: jnp.ndarray, positions: jnp.ndarray,
+) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """Training / no-cache forward. Returns (x, aux_loss)."""
+    aux = jnp.zeros((), jnp.float32)
+    h = apply_norm(p["norm1"], x, cfg.norm)
+    if kind == ATTN:
+        x = x + attn.attn_apply(p["attn"], cfg, h, positions,
+                                causal=True, window=_layer_window(cfg, kind))
+        h2 = apply_norm(p["norm2"], x, cfg.norm)
+        if "moe" in p:
+            moe_fn = moe_mod.moe_apply_ep if cfg.moe_impl == "ep" else moe_mod.moe_apply
+            y, aux = moe_fn(p["moe"], cfg, h2)
+            x = x + y
+        elif "mlp" in p:
+            x = x + mlp_apply(p["mlp"], cfg, h2)
+    elif kind == RECUR:
+        x = x + rglru_apply(p["recur"], cfg, h)
+        if "mlp" in p:
+            x = x + mlp_apply(p["mlp"], cfg, apply_norm(p["norm2"], x, cfg.norm))
+    elif kind == MLSTM:
+        x = x + mlstm_apply(p["mlstm"], cfg, h)
+    elif kind == SLSTM:
+        x = x + slstm_apply(p["slstm"], cfg, h)
+    if cfg.act_shard == "seq":
+        x = constrain(x, ("pod", "data"), "model", None)
+    else:
+        x = constrain(x, ("pod", "data"), None, None)
+    return x, aux
+
+
+def block_prefill(p, cfg, kind, x, positions, cache):
+    """Forward that also produces a decode cache for this layer."""
+    h = apply_norm(p["norm1"], x, cfg.norm)
+    if kind == ATTN:
+        y, new_cache = attn.attn_prefill(
+            p["attn"], cfg, h, positions, cache,
+            causal=True, window=_layer_window(cfg, kind))
+        x = x + y
+        h2 = apply_norm(p["norm2"], x, cfg.norm)
+        if "moe" in p:
+            moe_fn = moe_mod.moe_apply_ep if cfg.moe_impl == "ep" else moe_mod.moe_apply
+            y2, _ = moe_fn(p["moe"], cfg, h2)
+            x = x + y2
+        elif "mlp" in p:
+            x = x + mlp_apply(p["mlp"], cfg, h2)
+    elif kind == RECUR:
+        y, new_cache = rglru_apply(p["recur"], cfg, h, return_state=True)
+        x = x + y
+        if "mlp" in p:
+            x = x + mlp_apply(p["mlp"], cfg, apply_norm(p["norm2"], x, cfg.norm))
+    elif kind == MLSTM:
+        y, new_cache = mlstm_apply(p["mlstm"], cfg, h, return_state=True)
+        x = x + y
+    elif kind == SLSTM:
+        raise NotImplementedError("sLSTM prefill-with-state uses the scan path")
+    x = constrain(x, ("pod", "data"), None, None)
+    return x, new_cache
+
+
+def block_decode(p, cfg, kind, x, positions, cache):
+    """One-token step. x (B,1,D)."""
+    h = apply_norm(p["norm1"], x, cfg.norm)
+    if kind == ATTN:
+        y, new_cache = attn.attn_decode(
+            p["attn"], cfg, h, positions, cache, window=_layer_window(cfg, kind))
+        x = x + y
+        h2 = apply_norm(p["norm2"], x, cfg.norm)
+        if "moe" in p:
+            moe_fn = moe_mod.moe_apply_ep if cfg.moe_impl == "ep" else moe_mod.moe_apply
+            y2, _ = moe_fn(p["moe"], cfg, h2, capacity_factor=2.0)
+            x = x + y2
+        elif "mlp" in p:
+            x = x + mlp_apply(p["mlp"], cfg, h2)
+    elif kind == RECUR:
+        y, new_cache = rglru_decode(p["recur"], cfg, h, cache)
+        x = x + y
+        if "mlp" in p:
+            x = x + mlp_apply(p["mlp"], cfg, apply_norm(p["norm2"], x, cfg.norm))
+    elif kind == MLSTM:
+        y, new_cache = mlstm_decode(p["mlstm"], cfg, h, cache)
+        x = x + y
+    elif kind == SLSTM:
+        y, new_cache = slstm_decode(p["slstm"], cfg, h, cache)
+        x = x + y
+    return x, new_cache
+
+
+# ---------------------------------------------------------------------------
+# the stack
+# ---------------------------------------------------------------------------
+
+def _uniform(cfg) -> bool:
+    return cfg.scan_layers and set(cfg.pattern()) == {ATTN}
+
+
+def stack_init(key, cfg) -> Params:
+    if _uniform(cfg):
+        keys = jax.random.split(key, cfg.num_layers)
+        stacked = jax.vmap(lambda k: block_init(k, cfg, ATTN))(keys)
+        return {"layers": stacked}
+    blocks = {}
+    pattern = cfg.pattern()
+    keys = jax.random.split(key, cfg.num_layers)
+    for i, kind in enumerate(pattern):
+        blocks[str(i)] = block_init(keys[i], cfg, kind)
+    return {"blocks": blocks}
+
+
+def _remat(fn, cfg):
+    if cfg.remat == "none":
+        return fn
+    if cfg.remat == "dots":
+        policy = jax.checkpoint_policies.checkpoint_dots_with_no_batch_dims
+        return jax.checkpoint(fn, policy=policy)
+    return jax.checkpoint(fn)  # full
+
+
+def stack_apply(p: Params, cfg, x, positions) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    if "layers" in p:
+        def body(carry, lp):
+            h, aux = carry
+            h, aux_i = block_apply(lp, cfg, ATTN, h, positions)
+            return (h, aux + aux_i), None
+
+        (x, aux), _ = jax.lax.scan(
+            _remat(body, cfg), (x, jnp.zeros((), jnp.float32)), p["layers"]
+        )
+        return x, aux
+    aux = jnp.zeros((), jnp.float32)
+    pattern = cfg.pattern()
+    for i, kind in enumerate(pattern):
+        fn = _remat(functools.partial(block_apply, p["blocks"][str(i)], cfg, kind), cfg)
+        x, aux_i = fn(x, positions)
+        aux = aux + aux_i
+    return x, aux
+
+
+def stack_prefill(p: Params, cfg, x, positions, caches):
+    if "layers" in p:
+        def body(carry, inp):
+            lp, cache = inp
+            y, new_cache = block_prefill(lp, cfg, ATTN, carry, positions, cache)
+            return y, new_cache
+        x, new_caches = jax.lax.scan(body, x, (p["layers"], caches))
+        return x, new_caches
+    new_caches = []
+    for i, kind in enumerate(cfg.pattern()):
+        if kind == SLSTM:
+            # sequential state: run scan-based prefill (slow path, exactness)
+            x, cache = _slstm_prefill(p["blocks"][str(i)], cfg, x, caches[i])
+        else:
+            x, cache = block_prefill(p["blocks"][str(i)], cfg, kind, x, positions, caches[i])
+        new_caches.append(cache)
+    return x, new_caches
+
+
+def _slstm_prefill(bp, cfg, x, cache):
+    from .xlstm import slstm_cell
+    from .layers import dense
+
+    h = apply_norm(bp["norm1"], x, cfg.norm)
+    gx = dense(bp["slstm"]["w"], h)
+
+    def step(state, gx_t):
+        new = slstm_cell(bp["slstm"], cfg, gx_t, state)
+        return new, new["h"]
+
+    final, hs = jax.lax.scan(step, cache, gx.swapaxes(0, 1))
+    hs = hs.swapaxes(0, 1).astype(x.dtype)
+    y = dense(bp["slstm"]["w_down"], jax.nn.gelu(dense(bp["slstm"]["w_up"], hs)))
+    return x + y, final
+
+
+def stack_decode(p: Params, cfg, x, positions, caches):
+    if "layers" in p:
+        def body(carry, inp):
+            lp, cache = inp
+            y, new_cache = block_decode(lp, cfg, ATTN, carry, positions, cache)
+            return y, new_cache
+        x, new_caches = jax.lax.scan(body, x, (p["layers"], caches))
+        return x, new_caches
+    new_caches = []
+    for i, kind in enumerate(cfg.pattern()):
+        x, cache = block_decode(p["blocks"][str(i)], cfg, kind, x, positions, caches[i])
+        new_caches.append(cache)
+    return x, new_caches
+
+
+# ---------------------------------------------------------------------------
+# caches
+# ---------------------------------------------------------------------------
+
+def _attn_cache_init(cfg, batch: int, cache_len: int, dtype) -> Dict[str, Any]:
+    length = min(cache_len, cfg.attn_window) if cfg.attn_window else cache_len
+    return {
+        "k": jnp.zeros((batch, length, cfg.num_kv_heads, cfg.hd()), dtype),
+        "v": jnp.zeros((batch, length, cfg.num_kv_heads, cfg.hd()), dtype),
+        "pos": jnp.zeros((), jnp.int32),
+    }
+
+
+def init_cache(cfg, batch: int, cache_len: int, dtype=None):
+    dtype = dtype or _dt(cfg)
+    if _uniform(cfg):
+        one = _attn_cache_init(cfg, batch, cache_len, dtype)
+        return jax.tree_util.tree_map(
+            lambda a: jnp.broadcast_to(a[None], (cfg.num_layers,) + a.shape).copy(), one
+        )
+    caches: List[Any] = []
+    for kind in cfg.pattern():
+        if kind == ATTN:
+            caches.append(_attn_cache_init(cfg, batch, cache_len, dtype))
+        elif kind == RECUR:
+            caches.append(rglru_state_init(cfg, batch, dtype))
+        elif kind == MLSTM:
+            caches.append(mlstm_state_init(cfg, batch, dtype))
+        elif kind == SLSTM:
+            caches.append(slstm_state_init(cfg, batch, dtype))
+    return caches

@@ -1,0 +1,330 @@
+"""xLSTM blocks (arXiv:2405.04517): mLSTM (matrix memory) and sLSTM (scalar).
+
+mLSTM is attention-free and parallelizable: training/prefill use the
+stabilized quadratic "parallel form" (a decay-masked QK^T — structurally a
+flash-attention-like computation, which is why this family still benefits
+from the MXU); decode is an O(1) recurrent update on a (H, dh, dh) matrix
+memory — this is what makes the 0.5M-token `long_500k` cell runnable.
+
+sLSTM has true sequential recurrence (h_{t-1} enters the gates), implemented
+with `jax.lax.scan` over time; its state is O(H·dh) per token stream.
+
+Both follow the paper's pre-LN residual block layout with projection factor
+2 (mLSTM) and a gated output. Exponential gating uses the m-stabilizer from
+the paper, all gate math in fp32.
+"""
+from __future__ import annotations
+
+import math
+from typing import Any, Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from .layers import Params, dense, dense_init
+
+NEG_INF = -1e30
+
+
+# ---------------------------------------------------------------------------
+# mLSTM
+# ---------------------------------------------------------------------------
+
+def mlstm_init(key, cfg) -> Params:
+    d = cfg.d_model
+    inner = 2 * d
+    h = cfg.num_heads
+    dt = {"bfloat16": jnp.bfloat16, "float32": jnp.float32}[cfg.param_dtype]
+    ks = jax.random.split(key, 8)
+    return {
+        "w_up": dense_init(ks[0], d, inner, dt),
+        "w_z": dense_init(ks[1], d, inner, dt),
+        "wq": dense_init(ks[2], inner, inner, dt),
+        "wk": dense_init(ks[3], inner, inner, dt),
+        "wv": dense_init(ks[4], inner, inner, dt),
+        "w_if": dense_init(ks[5], inner, 2 * h, jnp.float32, bias=True),
+        "conv": {"w": jax.random.normal(ks[6], (cfg.conv_width, inner), jnp.float32).astype(dt) * 0.1},
+        "w_down": dense_init(ks[7], inner, d, dt, scale=1.0 / max(1, cfg.num_layers) ** 0.5),
+    }
+
+
+def _causal_conv(x: jnp.ndarray, w: jnp.ndarray, state: jnp.ndarray = None):
+    """Depthwise causal conv along time. x (B,S,C), w (W,C)."""
+    wdt = w.shape[0]
+    xp = jnp.pad(x, ((0, 0), (wdt - 1, 0), (0, 0)))
+    out = sum(xp[:, i : i + x.shape[1]] * w[i] for i in range(wdt))
+    return out
+
+
+def _conv_step(x_t: jnp.ndarray, w: jnp.ndarray, buf: jnp.ndarray):
+    """Single decode step. x_t (B,C); buf (B,W-1,C) past inputs."""
+    full = jnp.concatenate([buf, x_t[:, None]], axis=1)  # (B, W, C)
+    out = jnp.einsum("bwc,wc->bc", full, w)
+    return out, full[:, 1:]
+
+
+def _split_heads(x, h):
+    b, s, inner = x.shape
+    return x.reshape(b, s, h, inner // h)
+
+
+def mlstm_parallel(q, k, v, log_i, log_f):
+    """Stabilized parallel (quadratic) mLSTM form.
+
+    q,k,v: (B,S,H,dh); log_i/log_f: (B,S,H) fp32.
+    Returns h_tilde (B,S,H,dh).
+    """
+    b, s, h, dh = q.shape
+    lf_cum = jnp.cumsum(log_f, axis=1)  # (B,S,H) F_t = sum_{u<=t} log f_u
+    # D[t, u] = exp(F_t - F_u + log_i_u) for u <= t  (contribution of step u at t)
+    dmat = lf_cum[:, :, None, :] - lf_cum[:, None, :, :] + log_i[:, None, :, :]
+    tmask = jnp.tril(jnp.ones((s, s), bool))
+    dmat = jnp.where(tmask[None, :, :, None], dmat, NEG_INF)  # (B,T,U,H)
+    m = jnp.max(dmat, axis=2, keepdims=True)  # (B,T,1,H) stabilizer
+    dexp = jnp.exp(dmat - m)
+    scores = jnp.einsum("bthd,buhd->btuh", q.astype(jnp.float32), k.astype(jnp.float32))
+    scores = scores / math.sqrt(dh)
+    w = scores * dexp
+    norm = jnp.maximum(jnp.abs(jnp.sum(w, axis=2)), jnp.exp(-m[:, :, 0]))  # (B,T,H)
+    out = jnp.einsum("btuh,buhd->bthd", w, v.astype(jnp.float32))
+    out = out / (norm[..., None] + 1e-6)
+    return out.astype(q.dtype)
+
+
+def mlstm_step(state: Dict[str, jnp.ndarray], q, k, v, log_i, log_f):
+    """O(1) recurrent update. q,k,v: (B,H,dh); gates (B,H).
+
+    state: C (B,H,dh,dh), n (B,H,dh), m (B,H).
+    """
+    dh = q.shape[-1]
+    m_prev, c_prev, n_prev = state["m"], state["C"], state["n"]
+    m_new = jnp.maximum(log_f + m_prev, log_i)
+    i_ = jnp.exp(log_i - m_new)
+    f_ = jnp.exp(log_f + m_prev - m_new)
+    kf = k.astype(jnp.float32) / math.sqrt(dh)
+    c_new = f_[..., None, None] * c_prev + i_[..., None, None] * (
+        v.astype(jnp.float32)[..., :, None] * kf[..., None, :]
+    )  # C[d_v, d_k]
+    n_new = f_[..., None] * n_prev + i_[..., None] * kf
+    qf = q.astype(jnp.float32)
+    num = jnp.einsum("bhvk,bhk->bhv", c_new, qf)
+    den = jnp.maximum(jnp.abs(jnp.einsum("bhk,bhk->bh", n_new, qf)), jnp.exp(-m_new))
+    h = num / (den[..., None] + 1e-6)
+    return {"C": c_new, "n": n_new, "m": m_new}, h.astype(q.dtype)
+
+
+def _mlstm_qk_gates(p: Params, cfg, x_in: jnp.ndarray):
+    """Shared projection path: x_in (B,S,inner) post-conv activations."""
+    h = cfg.num_heads
+    q = _split_heads(dense(p["wq"], x_in), h)
+    k = _split_heads(dense(p["wk"], x_in), h)
+    gates = dense(p["w_if"], x_in.astype(jnp.float32))  # (B,S,2H)
+    log_i = gates[..., :h]  # exponential input gate: log i = pre-activation
+    log_f = jax.nn.log_sigmoid(gates[..., h:])
+    return q, k, log_i, log_f
+
+
+def mlstm_sequence(q, k, v, log_i, log_f, state0=None, chunk: int = 256):
+    """Chunkwise-parallel mLSTM: O(S·chunk) memory, exact math.
+
+    Within a chunk the stabilized quadratic form runs on the MXU; across
+    chunks the (C, n, m) matrix-memory state is carried by a scan. This is
+    the TPU-native adaptation (VMEM-sized tiles, no S×S materialization) and
+    is what makes 32k-token prefill lowerable.
+
+    q,k,v: (B,S,H,dh); gates (B,S,H) fp32. Returns (out, final_state).
+    """
+    b, s, h, dh = q.shape
+    k = k / math.sqrt(dh)
+    chunk = min(chunk, s)
+    pad = (-s) % chunk
+    if pad:
+        zpad = lambda a: jnp.pad(a, ((0, 0), (0, pad)) + ((0, 0),) * (a.ndim - 2))
+        q, k, v = zpad(q), zpad(k), zpad(v)
+        log_i = jnp.pad(log_i, ((0, 0), (0, pad), (0, 0)), constant_values=NEG_INF)
+        log_f = jnp.pad(log_f, ((0, 0), (0, pad), (0, 0)))
+    sp = s + pad
+    nc = sp // chunk
+
+    def to_chunks(a):
+        return a.reshape(b, nc, chunk, *a.shape[2:]).swapaxes(0, 1)
+
+    qc_all, kc_all, vc_all = to_chunks(q), to_chunks(k), to_chunks(v)
+    li_all, lf_all = to_chunks(log_i), to_chunks(log_f)
+
+    if state0 is None:
+        state0 = {
+            "C": jnp.zeros((b, h, dh, dh), jnp.float32),
+            "n": jnp.zeros((b, h, dh), jnp.float32),
+            "m": jnp.full((b, h), -1e9, jnp.float32),
+        }
+
+    tmask = jnp.tril(jnp.ones((chunk, chunk), bool))
+
+    def chunk_fn(carry, inp):
+        c0, n0, m0 = carry["C"], carry["n"], carry["m"]
+        qc, kc, vc, li, lf = inp
+        qf, kf, vf = (a.astype(jnp.float32) for a in (qc, kc, vc))
+        fcum = jnp.cumsum(lf, axis=1)  # (B,W,H) inclusive
+        dmat = fcum[:, :, None] - fcum[:, None] + li[:, None]  # (B,t,u,H)
+        dmat = jnp.where(tmask[None, :, :, None], dmat, NEG_INF)
+        e_t = fcum + m0[:, None]  # (B,W,H) weight of entering state at t
+        m_t = jnp.maximum(jnp.max(dmat, axis=2), e_t)  # (B,W,H)
+        dexp = jnp.exp(dmat - m_t[:, :, None])
+        scores = jnp.einsum("bthd,buhd->btuh", qf, kf) * dexp
+        inter_w = jnp.exp(e_t - m_t)  # (B,W,H)
+        num = jnp.einsum("btuh,buhd->bthd", scores, vf)
+        num += jnp.einsum("bhvk,bthk->bthv", c0, qf) * inter_w[..., None]
+        den = jnp.sum(scores, axis=2) + jnp.einsum("bhk,bthk->bth", n0, qf) * inter_w
+        den = jnp.maximum(jnp.abs(den), jnp.exp(-m_t))
+        out = (num / (den[..., None] + 1e-6)).astype(qc.dtype)
+        # state to next chunk
+        f_last = fcum[:, -1]  # (B,H)
+        m_new = jnp.maximum(m0 + f_last, jnp.max(f_last[:, None] - fcum + li, axis=1))
+        decay = jnp.exp(m0 + f_last - m_new)
+        per_u = jnp.exp(f_last[:, None] - fcum + li - m_new[:, None])  # (B,W,H)
+        c_new = decay[..., None, None] * c0 + jnp.einsum("buh,buhv,buhk->bhvk", per_u, vf, kf)
+        n_new = decay[..., None] * n0 + jnp.einsum("buh,buhk->bhk", per_u, kf)
+        return {"C": c_new, "n": n_new, "m": m_new}, out
+
+    final_state, outs = jax.lax.scan(chunk_fn, state0, (qc_all, kc_all, vc_all, li_all, lf_all))
+    out = outs.swapaxes(0, 1).reshape(b, sp, h, dh)[:, :s]
+    return out, final_state
+
+
+def mlstm_apply(p: Params, cfg, x: jnp.ndarray, state0=None, return_state: bool = False):
+    """Full-sequence mLSTM block body (after the outer norm). x (B,S,D)."""
+    up = dense(p["w_up"], x)
+    z = dense(p["w_z"], x)
+    conv = jax.nn.silu(_causal_conv(up, p["conv"]["w"]))
+    q, k, log_i, log_f = _mlstm_qk_gates(p, cfg, conv)
+    v = _split_heads(up, cfg.num_heads)  # values from the pre-conv stream
+    ht, state = mlstm_sequence(q, k, v, log_i, log_f, state0=state0,
+                               chunk=getattr(cfg, "mlstm_chunk", 256))
+    b, s, _, _ = ht.shape
+    out = ht.reshape(b, s, -1) * jax.nn.silu(z)
+    y = dense(p["w_down"], out)
+    if return_state:
+        conv_buf = conv_tail_buffer(up, p["conv"]["w"].shape[0])
+        return y, dict(state, conv_buf=conv_buf)
+    return y
+
+
+def conv_tail_buffer(x: jnp.ndarray, width: int) -> jnp.ndarray:
+    """Last width-1 inputs, for continuing a causal conv at decode time."""
+    b, s, c = x.shape
+    need = width - 1
+    if s >= need:
+        return x[:, s - need :]
+    return jnp.pad(x, ((0, 0), (need - s, 0), (0, 0)))
+
+
+def mlstm_decode(p: Params, cfg, x_t: jnp.ndarray, state: Dict[str, Any]):
+    """One-token step. x_t (B,1,D); state {C,n,m,conv_buf}."""
+    xt = x_t[:, 0]
+    up = dense(p["w_up"], x_t)[:, 0]
+    z = dense(p["w_z"], x_t)[:, 0]
+    conv_out, conv_buf = _conv_step(up, p["conv"]["w"], state["conv_buf"])
+    conv_out = jax.nn.silu(conv_out)
+    h = cfg.num_heads
+    inner = up.shape[-1]
+    dh = inner // h
+    q = dense(p["wq"], conv_out).reshape(-1, h, dh)
+    k = dense(p["wk"], conv_out).reshape(-1, h, dh)
+    gates = dense(p["w_if"], conv_out.astype(jnp.float32))
+    log_i, log_f = gates[..., :h], jax.nn.log_sigmoid(gates[..., h:])
+    v = up.reshape(-1, h, dh)
+    cell_state = {"C": state["C"], "n": state["n"], "m": state["m"]}
+    new_cell, ht = mlstm_step(cell_state, q, k, v, log_i, log_f)
+    out = ht.reshape(ht.shape[0], inner) * jax.nn.silu(z)
+    y = dense(p["w_down"], out)[:, None]
+    new_state = dict(new_cell, conv_buf=conv_buf)
+    return y, new_state
+
+
+def mlstm_state_init(cfg, batch: int, dtype=jnp.float32) -> Dict[str, jnp.ndarray]:
+    h = cfg.num_heads
+    inner = 2 * cfg.d_model
+    dh = inner // h
+    return {
+        "C": jnp.zeros((batch, h, dh, dh), jnp.float32),
+        "n": jnp.zeros((batch, h, dh), jnp.float32),
+        "m": jnp.full((batch, h), -1e9, jnp.float32),
+        "conv_buf": jnp.zeros((batch, cfg.conv_width - 1, inner), dtype),
+    }
+
+
+# ---------------------------------------------------------------------------
+# sLSTM
+# ---------------------------------------------------------------------------
+
+def slstm_init(key, cfg) -> Params:
+    d = cfg.d_model
+    h = cfg.num_heads
+    dh = d // h
+    dt = {"bfloat16": jnp.bfloat16, "float32": jnp.float32}[cfg.param_dtype]
+    ks = jax.random.split(key, 4)
+    # 4 gates (i, f, z, o); recurrent weights are block-diagonal per head.
+    w = jax.random.normal(ks[0], (d, 4 * d), jnp.float32) / math.sqrt(d)
+    r = jax.random.normal(ks[1], (h, dh, 4 * dh), jnp.float32) / math.sqrt(dh)
+    up_f = int(d * 4 / 3 / 64) * 64 or d
+    return {
+        "w": {"w": w.astype(dt)},
+        "r": {"w": (r * 0.1).astype(dt)},
+        "b": jnp.zeros((4 * d,), jnp.float32),
+        "w_up": dense_init(ks[2], d, up_f, dt),
+        "w_down": dense_init(ks[3], up_f, d, dt, scale=1.0 / max(1, cfg.num_layers) ** 0.5),
+    }
+
+
+def slstm_cell(p: Params, cfg, gx_t: jnp.ndarray, state: Dict[str, jnp.ndarray]):
+    """gx_t: (B, 4D) input-side gate pre-activations at step t."""
+    h_heads = cfg.num_heads
+    b = gx_t.shape[0]
+    d = gx_t.shape[-1] // 4
+    dh = d // h_heads
+    h_prev = state["h"].reshape(b, h_heads, dh)
+    rec = jnp.einsum("bhd,hde->bhe", h_prev.astype(jnp.float32), p["r"]["w"].astype(jnp.float32))
+    g = gx_t.astype(jnp.float32) + rec.reshape(b, 4 * d) + p["b"]
+    gi, gf, gz, go = jnp.split(g, 4, axis=-1)
+    m_prev = state["m"]
+    m_new = jnp.maximum(gf + m_prev, gi)  # exp forget gate variant
+    i_ = jnp.exp(gi - m_new)
+    f_ = jnp.exp(gf + m_prev - m_new)
+    c_new = f_ * state["c"] + i_ * jnp.tanh(gz)
+    n_new = f_ * state["n"] + i_
+    h_new = jax.nn.sigmoid(go) * c_new / (n_new + 1e-6)
+    return {"c": c_new, "n": n_new, "h": h_new, "m": m_new}
+
+
+def slstm_apply(p: Params, cfg, x: jnp.ndarray) -> jnp.ndarray:
+    """Sequential sLSTM over (B,S,D) + gated up/down projection."""
+    b, s, d = x.shape
+    gx = dense(p["w"], x)  # (B,S,4D) input-side contributions, batched matmul
+
+    def step(state, gx_t):
+        new = slstm_cell(p, cfg, gx_t, state)
+        return new, new["h"]
+
+    state0 = slstm_state_init(cfg, b)
+    _, hs = jax.lax.scan(step, state0, gx.swapaxes(0, 1))
+    hs = hs.swapaxes(0, 1).astype(x.dtype)  # (B,S,D)
+    return dense(p["w_down"], jax.nn.gelu(dense(p["w_up"], hs)))
+
+
+def slstm_decode(p: Params, cfg, x_t: jnp.ndarray, state: Dict[str, Any]):
+    gx = dense(p["w"], x_t)[:, 0]
+    new = slstm_cell(p, cfg, gx, state)
+    h = new["h"].astype(x_t.dtype)[:, None]
+    y = dense(p["w_down"], jax.nn.gelu(dense(p["w_up"], h)))
+    return y, new
+
+
+def slstm_state_init(cfg, batch: int, dtype=jnp.float32) -> Dict[str, jnp.ndarray]:
+    d = cfg.d_model
+    return {
+        "c": jnp.zeros((batch, d), jnp.float32),
+        "n": jnp.ones((batch, d), jnp.float32),
+        "h": jnp.zeros((batch, d), jnp.float32),
+        "m": jnp.zeros((batch, d), jnp.float32),
+    }

@@ -1,0 +1,13 @@
+import os
+import sys
+
+# tests must see exactly ONE device (the dry-run sets 512 in its own process)
+assert "xla_force_host_platform_device_count" not in os.environ.get("XLA_FLAGS", ""), \
+    "tests must run without the dry-run's device-count override"
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+from hypothesis import settings
+
+settings.register_profile("ci", max_examples=25, deadline=None)
+settings.load_profile("ci")

@@ -1,0 +1,113 @@
+"""Property tests (hypothesis) for the datacenter environment invariants."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.dcsim import env as E
+from repro.dcsim import colocation, power, topology
+
+ENV4 = E.build_env(4, seed=0)
+ENV8 = E.build_env(8, seed=1)
+
+
+@st.composite
+def fractions_strategy(draw, i=10, d=4):
+    rows = draw(st.lists(
+        st.lists(st.floats(0.01, 10.0), min_size=d, max_size=d),
+        min_size=i, max_size=i))
+    f = np.asarray(rows)
+    return f / f.sum(axis=1, keepdims=True)
+
+
+@given(fractions_strategy(), st.integers(0, 23))
+def test_project_feasible_satisfies_constraints(fracs, tau):
+    """Eq. (1): split sums to CAR; eq. (2): AR <= ER everywhere."""
+    ar = E.project_feasible(ENV4, jnp.asarray(fracs, jnp.float32), tau)
+    car = ENV4.car[:, tau]
+    np.testing.assert_allclose(np.asarray(jnp.sum(ar, axis=1)), np.asarray(car),
+                               rtol=2e-3)
+    assert bool(jnp.all(ar <= ENV4.er * (1 + 1e-5)))
+    assert bool(jnp.all(ar >= 0))
+
+
+@given(st.integers(0, 23))
+def test_peak_increase_monotone_and_nonnegative(tau):
+    fr = jnp.full((10, 4), 0.25)
+    ar = E.project_feasible(ENV4, fr, tau)
+    peak0 = jnp.zeros((4,))
+    delta0, peak1 = E.peak_increase(ENV4, ar, tau, peak0)
+    assert bool(jnp.all(delta0 >= 0))
+    # second epoch with the same load: no new peak charge
+    delta1, peak2 = E.peak_increase(ENV4, ar, tau, peak1)
+    assert float(jnp.sum(delta1)) < 1e-6
+    assert bool(jnp.all(peak2 >= peak1))
+
+
+@given(st.floats(0.1, 0.9), st.integers(0, 23))
+def test_more_load_more_power(scale, tau):
+    fr = jnp.full((10, 4), 0.25)
+    ar = E.project_feasible(ENV4, fr, tau)
+    p_full = E.grid_power(ENV4, ar, tau)
+    p_less = E.grid_power(ENV4, ar * scale, tau)
+    assert bool(jnp.all(p_less <= p_full + 1e-6))
+
+
+def test_carbon_estimate_decomposition():
+    """CE (eq. 13) == sum over players of CET (eq. 12)."""
+    tau = 12
+    fr = jnp.full((10, 4), 0.25)
+    ar = E.project_feasible(ENV4, fr, tau)
+    ce = float(E.ce_est(ENV4, ar, tau))
+    cets = E.cet_est(ENV4, ar, tau)
+    assert abs(ce - float(jnp.sum(cets))) < 1e-4 * abs(ce)
+
+
+def test_renewables_reduce_net_power():
+    env_hi = E.build_env(4, seed=0, renewable_scale=1.5)
+    env_lo = E.build_env(4, seed=0, renewable_scale=0.1)
+    tau = 20  # afternoon US: solar high somewhere
+    fr = jnp.full((10, 4), 0.25)
+    ar_hi = E.project_feasible(env_hi, fr, tau)
+    ar_lo = E.project_feasible(env_lo, fr, tau)
+    assert float(jnp.sum(E.grid_power(env_hi, ar_hi, tau))) < \
+        float(jnp.sum(E.grid_power(env_lo, ar_lo, tau)))
+
+
+def test_colocation_blowup_increases_with_intensity():
+    coer = colocation.coer_core(3)
+    bet = colocation.base_time_table(3)
+    # co-located rate must be <= solo rate (1/bet) for every (i, j)
+    solo = 1.0 / bet
+    assert np.all(coer <= solo * 1.15 + 1e-9)
+    # high-intensity classes lose more than low-intensity ones on the same node
+    ratios = coer / solo
+    low = [i for i, t in enumerate(topology.TASK_TYPES) if t[1] == 0]
+    high = [i for i, t in enumerate(topology.TASK_TYPES) if t[1] == 2]
+    assert ratios[high].mean() < ratios[low].mean()
+
+
+def test_cop_model_positive_and_increasing():
+    t = np.linspace(10, 30, 10)
+    c = power.cop(t)
+    assert np.all(c > 0)
+    assert np.all(np.diff(c) > 0)
+
+
+def test_step_epoch_metrics_finite_and_consistent():
+    tau = 5
+    fr = jnp.full((10, 8), 1.0 / 8)
+    ar = E.project_feasible(ENV8, fr, tau)
+    peak, m = E.step_epoch(ENV8, jnp.zeros((8,)), ar, tau)
+    for k, v in m.items():
+        assert bool(jnp.isfinite(v)), k
+    assert float(m["cost_usd"]) >= float(m["network_cost_usd"]) - 1e-6
+    assert float(m["max_rho"]) <= 1.0
+
+
+def test_er_table_positive_and_heterogeneous():
+    er = np.asarray(ENV8.er)
+    assert np.all(er > 0)
+    # heterogeneity: different DCs have different rates for the same task
+    assert np.std(er, axis=1).min() > 0

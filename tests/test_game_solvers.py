@@ -1,0 +1,101 @@
+"""Game formulation + all six solvers: constraints, equilibrium, ordering."""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import ddpg, force_directed, genetic, gt_drl, nash, ppo_joint
+from repro.core.game import (GameContext, cloud_objective, nash_residual,
+                             fractions_to_ar, uniform_fractions)
+from repro.core.ppo import PPOConfig
+from repro.dcsim import env as E
+
+ENV = E.build_env(4, seed=0)
+PEAK = jnp.zeros((4,))
+CTX = GameContext(env=ENV, tau=jnp.int32(18), objective="carbon")
+KEY = jax.random.PRNGKey(0)
+
+FAST_GTDRL = gt_drl.GTDRLConfig(
+    ppo=PPOConfig(horizon=4, episodes=16, iters=2, update_epochs=2),
+    rounds=2, polish_steps=15, pretrain_iters=4)
+
+
+def _check_result(res):
+    f = res.fractions
+    assert f.shape == (10, 4)
+    np.testing.assert_allclose(np.asarray(jnp.sum(f, axis=1)), 1.0, rtol=1e-4)
+    assert bool(jnp.all(f >= -1e-6))
+    ar = fractions_to_ar(CTX, f)
+    assert bool(jnp.all(ar <= ENV.er * (1 + 1e-5)))
+    v = float(cloud_objective(CTX, f, PEAK))
+    assert np.isfinite(v)
+    return v
+
+
+def test_nash_solver_improves_and_near_equilibrium():
+    res = nash.solve_epoch(None, CTX, PEAK)
+    v = _check_result(res)
+    v0 = float(cloud_objective(CTX, uniform_fractions(CTX), PEAK))
+    assert v < v0
+    assert float(nash_residual(CTX, res.fractions, PEAK)) < 0.05
+
+
+def test_fd_solver():
+    res = force_directed.solve_epoch(None, CTX, PEAK)
+    v = _check_result(res)
+    assert v <= float(cloud_objective(CTX, uniform_fractions(CTX), PEAK)) + 1e-6
+
+
+def test_ga_solver():
+    res = genetic.solve_epoch(KEY, CTX, PEAK, genetic.GAConfig(generations=40))
+    v = _check_result(res)
+    assert v <= float(cloud_objective(CTX, uniform_fractions(CTX), PEAK)) + 1e-6
+
+
+def test_ddpg_solver():
+    res = ddpg.solve_epoch(KEY, CTX, PEAK, ddpg.DDPGConfig(steps=60))
+    _check_result(res)
+
+
+def test_joint_ppo_solver():
+    cfg = ppo_joint.JointPPOConfig(ppo=PPOConfig(horizon=4, episodes=16, iters=4))
+    res = ppo_joint.solve_epoch(KEY, CTX, PEAK, cfg)
+    _check_result(res)
+
+
+def test_gt_drl_solver_beats_uniform():
+    agents = gt_drl.init_agents(KEY, ENV, FAST_GTDRL)
+    agents, res = gt_drl.solve_epoch(KEY, agents, CTX, PEAK, FAST_GTDRL)
+    v = _check_result(res)
+    v0 = float(cloud_objective(CTX, uniform_fractions(CTX), PEAK))
+    assert v < v0
+
+
+def test_gt_drl_state_action_space_is_per_player():
+    """The paper's central claim: GT-DRL agents see |D| dims, not |I|x|D|."""
+    d = E.num_dcs(ENV)
+    agents = gt_drl.init_agents(KEY, ENV, FAST_GTDRL)
+    # stacked leading axis = players; final actor layer outputs |D| logits
+    n_layers = len(agents.actor["mlp"]) // 2
+    w_last = agents.actor["mlp"][f"w{n_layers-1}"]
+    assert w_last.shape[0] == E.num_players(ENV)  # stacked players
+    assert w_last.shape[-1] == d                  # |D|-dim action space
+
+
+def test_gt_drl_cost_objective():
+    ctx = GameContext(env=ENV, tau=jnp.int32(9), objective="cost")
+    agents = gt_drl.init_agents(KEY, ENV, FAST_GTDRL)
+    agents, res = gt_drl.solve_epoch(KEY, agents, ctx, PEAK, FAST_GTDRL)
+    v = float(cloud_objective(ctx, res.fractions, PEAK))
+    assert np.isfinite(v)
+    assert v <= float(cloud_objective(ctx, uniform_fractions(ctx), PEAK)) + 1e-6
+
+
+def test_nash_residual_zero_only_at_equilibrium():
+    f0 = uniform_fractions(CTX)
+    r_uniform = float(nash_residual(CTX, f0, PEAK))
+    res = nash.solve_epoch(None, CTX, PEAK)
+    r_eq = float(nash_residual(CTX, res.fractions, PEAK))
+    assert r_eq < r_uniform

@@ -1,0 +1,95 @@
+"""Recurrent-block math: mLSTM chunkwise == quadratic == stepwise; RG-LRU
+associative scan == stepwise recurrence; hypothesis sweeps on shapes."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.configs import get_config
+from repro.models.rglru import (rglru_apply, rglru_decode, rglru_init,
+                                rglru_scan, rglru_state_init)
+from repro.models.xlstm import (mlstm_parallel, mlstm_sequence, mlstm_step,
+                                mlstm_apply, mlstm_decode, mlstm_init,
+                                mlstm_state_init)
+
+KEY = jax.random.PRNGKey(0)
+
+
+def _mlstm_inputs(b, s, h, dh, seed=0):
+    ks = jax.random.split(jax.random.PRNGKey(seed), 5)
+    q = jax.random.normal(ks[0], (b, s, h, dh))
+    k = jax.random.normal(ks[1], (b, s, h, dh))
+    v = jax.random.normal(ks[2], (b, s, h, dh))
+    log_i = jax.random.normal(ks[3], (b, s, h)) * 2
+    log_f = jax.nn.log_sigmoid(jax.random.normal(ks[4], (b, s, h)) + 2)
+    return q, k, v, log_i, log_f
+
+
+@pytest.mark.parametrize("chunk", [8, 24, 64])
+@pytest.mark.parametrize("s", [64, 96])
+def test_mlstm_chunkwise_equals_parallel(chunk, s):
+    q, k, v, li, lf = _mlstm_inputs(2, s, 4, 16)
+    ref = mlstm_parallel(q, k, v, li, lf)
+    out, _ = mlstm_sequence(q, k, v, li, lf, chunk=chunk)
+    assert float(jnp.max(jnp.abs(out - ref))) < 2e-4
+
+
+def test_mlstm_state_handoff_to_decode():
+    """Chunkwise prefill state + one recurrent step == parallel on s+1."""
+    b, s, h, dh = 2, 48, 4, 16
+    q, k, v, li, lf = _mlstm_inputs(b, s, h, dh)
+    _, state = mlstm_sequence(q, k, v, li, lf, chunk=16)
+    q1, k1, v1, li1, lf1 = (a[:, -1] for a in _mlstm_inputs(b, s, h, dh, seed=9)[:3]) \
+        if False else (None,) * 5
+    ks = jax.random.split(jax.random.PRNGKey(7), 5)
+    q1 = jax.random.normal(ks[0], (b, h, dh))
+    k1 = jax.random.normal(ks[1], (b, h, dh))
+    v1 = jax.random.normal(ks[2], (b, h, dh))
+    li1 = jax.random.normal(ks[3], (b, h))
+    lf1 = jax.nn.log_sigmoid(jax.random.normal(ks[4], (b, h)) + 2)
+    _, h_step = mlstm_step(state, q1, k1, v1, li1, lf1)
+    full = mlstm_parallel(
+        jnp.concatenate([q, q1[:, None]], 1), jnp.concatenate([k, k1[:, None]], 1),
+        jnp.concatenate([v, v1[:, None]], 1), jnp.concatenate([li, li1[:, None]], 1),
+        jnp.concatenate([lf, lf1[:, None]], 1))
+    assert float(jnp.max(jnp.abs(h_step - full[:, -1]))) < 2e-4
+
+
+def test_rglru_scan_equals_stepwise():
+    b, s, w = 2, 40, 16
+    ks = jax.random.split(KEY, 2)
+    log_a = -jax.nn.softplus(jax.random.normal(ks[0], (b, s, w)))
+    bb = jax.random.normal(ks[1], (b, s, w))
+    h_scan = rglru_scan(log_a, bb)
+    # sequential oracle
+    h = jnp.zeros((b, w))
+    outs = []
+    for t in range(s):
+        h = jnp.exp(log_a[:, t]) * h + bb[:, t]
+        outs.append(h)
+    ref = jnp.stack(outs, axis=1)
+    assert float(jnp.max(jnp.abs(h_scan - ref))) < 1e-5
+
+
+def test_rglru_block_prefill_decode_consistency():
+    cfg = get_config("recurrentgemma-9b").smoke()
+    p = rglru_init(KEY, cfg)
+    x = jax.random.normal(jax.random.PRNGKey(1), (2, 24, cfg.d_model)) * 0.3
+    y_full = rglru_apply(p, cfg, x)
+    y_pre, state = rglru_apply(p, cfg, x[:, :20], return_state=True)
+    y = y_pre
+    for t in range(20, 24):
+        y_t, state = rglru_decode(p, cfg, x[:, t : t + 1], state)
+        err = float(jnp.max(jnp.abs(y_t[:, 0] - y_full[:, t])))
+        assert err < 1e-3, (t, err)
+
+
+@given(st.integers(1, 4), st.integers(2, 30))
+@settings(max_examples=10, deadline=None)
+def test_mlstm_sequence_shape_property(b, s):
+    q, k, v, li, lf = _mlstm_inputs(b, s, 2, 8, seed=s)
+    out, state = mlstm_sequence(q, k, v, li, lf, chunk=8)
+    assert out.shape == (b, s, 2, 8)
+    assert bool(jnp.all(jnp.isfinite(out)))
+    assert bool(jnp.all(jnp.isfinite(state["C"])))

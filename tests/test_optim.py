@@ -1,0 +1,86 @@
+"""Optimizer + gradient compression tests."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, strategies as st
+
+from repro.optim.adamw import (AdamWConfig, _dequantize, _quantize, adamw_init,
+                               adamw_update, global_norm)
+from repro.optim.grad_compress import compress_decompress, ef_compress_tree, init_error
+from repro.optim.schedules import warmup_cosine
+
+
+def _rosenbrock_params():
+    return {"x": jnp.array([-1.2, 1.0, 0.5]), "y": {"z": jnp.array([2.0, -0.3])}}
+
+
+def _loss(p):
+    return jnp.sum((p["x"] - 1.0) ** 2) + 3.0 * jnp.sum(p["y"]["z"] ** 2)
+
+
+@pytest.mark.parametrize("cfg", [
+    AdamWConfig(lr=0.05, weight_decay=0.0),
+    AdamWConfig(lr=0.05, weight_decay=0.0, quantize_moments=True),
+    AdamWConfig(lr=0.05, weight_decay=0.0, moment_dtype="bfloat16"),
+])
+def test_adamw_converges(cfg):
+    p = _rosenbrock_params()
+    st_ = adamw_init(p, cfg)
+    for _ in range(300):
+        g = jax.grad(_loss)(p)
+        p, st_, _ = adamw_update(g, st_, p, cfg)
+    assert float(_loss(p)) < 1e-2
+
+
+def test_grad_clip_limits_update_norm():
+    cfg = AdamWConfig(lr=1.0, grad_clip=1e-3, weight_decay=0.0)
+    p = {"x": jnp.ones((4,))}
+    st_ = adamw_init(p, cfg)
+    g = {"x": jnp.full((4,), 1e6)}
+    _, _, m = adamw_update(g, st_, p, cfg)
+    assert float(m["grad_norm"]) > 1e5  # reported raw
+
+
+@given(st.lists(st.floats(-100, 100), min_size=3, max_size=64))
+def test_quantize_roundtrip_bounded_error(vals):
+    x = jnp.asarray(vals, jnp.float32)
+    q, s = _quantize(x)
+    back = _dequantize(q, s, x.shape)
+    blockmax = float(jnp.max(jnp.abs(x))) or 1.0
+    assert float(jnp.max(jnp.abs(back - x))) <= blockmax / 127.0 + 1e-6
+
+
+def test_error_feedback_is_lossless_over_time():
+    """EF property: sum of compressed grads + final error == sum of raw grads."""
+    key = jax.random.PRNGKey(0)
+    grads = [{"w": jax.random.normal(jax.random.fold_in(key, i), (64,))}
+             for i in range(20)]
+    err = init_error(jax.eval_shape(lambda: grads[0]))
+    sent = {"w": jnp.zeros((64,))}
+    for g in grads:
+        approx, err = ef_compress_tree(g, err)
+        sent = {"w": sent["w"] + approx["w"]}
+    total = {"w": sum(g["w"] for g in grads)}
+    resid = float(jnp.max(jnp.abs(sent["w"] + err["w"] - total["w"])))
+    assert resid < 1e-3
+
+
+def test_compress_decompress_error_shrinks_signal():
+    x = jax.random.normal(jax.random.PRNGKey(1), (256,))
+    approx, err = compress_decompress(x)
+    assert float(jnp.linalg.norm(err)) < 0.05 * float(jnp.linalg.norm(x))
+
+
+def test_schedule_warmup_and_decay():
+    s = warmup_cosine(jnp.arange(0, 1000), warmup=100, total=1000, floor=0.1)
+    s = np.asarray(s)
+    assert s[0] == 0.0
+    assert abs(s[100] - 1.0) < 0.02
+    assert s[-1] <= 0.2
+    assert np.all(s >= 0)
+
+
+def test_global_norm():
+    t = {"a": jnp.ones((3,)), "b": jnp.full((4,), 2.0)}
+    assert abs(float(global_norm(t)) - np.sqrt(3 + 16)) < 1e-5

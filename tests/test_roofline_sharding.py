@@ -1,0 +1,116 @@
+"""Roofline extraction machinery + sharding rule unit tests."""
+from types import SimpleNamespace
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from jax.sharding import PartitionSpec as P
+
+from repro.launch import roofline
+from repro.distributed import sharding as shd
+
+
+# ---------------------------------------------------------------------------
+# HLO collective parsing
+# ---------------------------------------------------------------------------
+
+HLO_SAMPLE = """
+ENTRY %main (p0: bf16[256,1024]) -> bf16[256,1024] {
+  %p0 = bf16[256,1024]{1,0} parameter(0)
+  %ag = bf16[256,16384]{1,0} all-gather(%p0), dimensions={1}
+  %ar = f32[128,64]{1,0} all-reduce(%conv), to_apply=%sum
+  %rs = bf16[16,1024]{1,0} reduce-scatter(%ag), dimensions={0}
+  %cp = u32[8]{0} collective-permute(%idx), source_target_pairs={{0,1}}
+  %a2a = (f32[4,4]{1,0}, f32[4,4]{1,0}) all-to-all(%x, %y), dimensions={0}
+  %dot = f32[128,64]{1,0} dot(%a, %b)
+}
+"""
+
+
+def test_collective_bytes_parser():
+    total, detail = roofline.collective_bytes(HLO_SAMPLE)
+    expect = (
+        256 * 16384 * 2      # all-gather bf16
+        + 128 * 64 * 4       # all-reduce f32
+        + 16 * 1024 * 2      # reduce-scatter bf16
+        + 8 * 4              # collective-permute u32
+        + 2 * 4 * 4 * 4      # all-to-all tuple of two f32[4,4]
+    )
+    assert total == expect
+    assert detail["counts"]["all-gather"] == 1
+    assert detail["counts"]["all-to-all"] == 1
+
+
+def test_probe_extrapolation_linear():
+    # cost(L) = 10 + 3L  -> probes at L=2 (16) and L=4 (22) -> L=10: 40
+    c1 = (16.0, 16.0, 16.0)
+    c2 = (22.0, 22.0, 22.0)
+    out = roofline.probe_extrapolate(c1, c2, period=2, num_layers=10)
+    assert out == (40.0, 40.0, 40.0)
+
+
+def test_model_flops_train_vs_decode():
+    cfg = SimpleNamespace(num_experts=0)
+    shape_t = SimpleNamespace(global_batch=8, seq_len=128, kind="train")
+    shape_d = SimpleNamespace(global_batch=8, seq_len=128, kind="decode")
+    n = 1_000_000
+    assert roofline.model_flops(cfg, shape_t, n) == 6.0 * n * 8 * 128
+    assert roofline.model_flops(cfg, shape_d, n) == 2.0 * n * 8
+
+
+# ---------------------------------------------------------------------------
+# sharding rules (mesh sizes faked; only axis sizes are consulted)
+# ---------------------------------------------------------------------------
+
+class FakeMesh:
+    axis_names = ("data", "model")
+    devices = np.zeros((16, 16))
+
+
+def test_param_rules_divisibility():
+    mesh = FakeMesh()
+    # qwen2-7b style q-proj: 3584 -> 28*128; flattened dims divide 16;
+    # scan-stacked params carry the (L, ...) depth dim
+    spec = shd._param_spec(mesh, "stack/layers/attn/wq/w", (28, 3584, 3584), False)
+    assert spec == P(None, None, "model")  # stacked: leading depth dim
+    spec = shd._param_spec(mesh, "stack/blocks/0/attn/wq/w", (3584, 3584), False)
+    assert spec == P(None, "model")
+    # whisper vocab 51865 does NOT divide 16 -> replicated dim
+    spec = shd._param_spec(mesh, "embed/w", (51865, 512), False)
+    assert spec == P(None, "model")
+    # arctic stacked experts (L, 128, d, f): expert-parallel over model
+    spec = shd._param_spec(mesh, "stack/layers/moe/experts/w_in/w", (35, 128, 7168, 4864), False)
+    assert spec == P(None, "model", None, None)
+    # qwen2-moe 60 experts do not divide 16 -> shard ffn width instead
+    spec = shd._param_spec(mesh, "stack/blocks/0/moe/experts/w_in/w", (60, 2048, 1408), False)
+    assert spec == P(None, None, "model")
+    # fsdp adds data-axis sharding on the other dim
+    spec = shd._param_spec(mesh, "stack/blocks/0/mlp/w_in/w", (4096, 11008), True)
+    assert spec == P("data", "model")
+    # norms replicate
+    spec = shd._param_spec(mesh, "stack/blocks/0/norm1/scale", (4096,), False)
+    assert spec == P(None)
+
+
+def test_cache_rules():
+    mesh = FakeMesh()
+    # stacked KV cache (L, B, S, KVH, hd): batch over data, seq over model
+    spec = shd._cache_spec(mesh, "k", (16, 128, 32768, 8, 64), batch=128)
+    assert spec == P(None, "data", "model", None, None)
+    # batch=1 long-context: no batch sharding
+    spec = shd._cache_spec(mesh, "h", (1, 4096), batch=1)
+    assert spec == P(None, "model")
+
+
+def test_batch_spec_drops_pod_when_indivisible():
+    class M3:
+        axis_names = ("pod", "data", "model")
+        devices = np.zeros((2, 16, 16))
+
+    # 256 % 32 == 0: shard over (pod, data)
+    assert shd.batch_spec(M3(), 256) == P(("pod", "data"))
+    # batch=16 % 32 != 0 but % 16 == 0: drop pod, keep data
+    assert shd.batch_spec(M3(), 16) == P(("data",))
+    # batch=1: fully replicated
+    assert shd.batch_spec(M3(), 1) == P(None)

@@ -1,0 +1,65 @@
+"""Serving layer: ModelServer generation, Fleet routing, EP MoE parity."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import get_config
+from repro.launch.serve import Fleet, ModelServer, Request
+from repro.models import moe as moe_mod
+from repro.distributed import sharding as shd
+from repro.launch.mesh import make_host_mesh
+
+
+def test_model_server_generates():
+    cfg = get_config("llama3.2-1b").smoke()
+    srv = ModelServer(cfg, batch_size=3, cache_len=48)
+    reqs = [Request(i, jnp.arange(1, 9, dtype=jnp.int32), max_new=5) for i in range(3)]
+    outs = srv.generate(reqs)
+    assert set(outs) == {0, 1, 2}
+    for toks in outs.values():
+        assert len(toks) == 5
+        assert all(0 <= t < cfg.vocab_size for t in toks)
+    assert srv.tokens_per_second() > 0
+
+
+def test_model_server_greedy_matches_forward():
+    """Server generation (prefill+decode) == argmax of teacher-forced forward."""
+    from repro.models import model as M
+
+    cfg = get_config("llama3.2-1b").smoke()
+    srv = ModelServer(cfg, batch_size=1, cache_len=64, seed=5)
+    prompt = jnp.arange(3, 19, dtype=jnp.int32)  # 16 tokens
+    outs = srv.generate([Request(0, prompt, max_new=3)])
+    # replicate greedily by running forward with the grown sequence
+    toks = list(np.asarray(prompt))
+    for _ in range(3):
+        batch = {"tokens": jnp.asarray(toks, jnp.int32)[None]}
+        logits, _ = M.forward(srv.params, cfg, batch)
+        toks.append(int(jnp.argmax(logits[0, -1])))
+    assert outs[0] == toks[16:], (outs[0], toks[16:])
+
+
+def test_fleet_routes_by_assignment():
+    fleet = Fleet(["llama3.2-1b", "xlstm-125m"], 2, smoke=True,
+                  batch_size=2, cache_len=32)
+    ar = jnp.array([[10.0, 0.0], [0.0, 10.0]])
+    report = fleet.route(ar, requests_per_unit=1, prompt_len=8, max_new=2)
+    assert report["total"] > 0
+    # traffic lands where the assignment put it
+    assert (0, 0) in report["dispatched"] or (1, 1) in report["dispatched"]
+    assert (0, 1) not in report["dispatched"]
+    assert (1, 0) not in report["dispatched"]
+
+
+@pytest.mark.parametrize("arch", ["qwen2-moe-a2.7b", "arctic-480b"])
+def test_ep_moe_matches_global_impl(arch):
+    """shard_map EP MoE == the global gather formulation, fwd and grad."""
+    cfg = get_config(arch).smoke()
+    p = moe_mod.moe_init(jax.random.PRNGKey(0), cfg)
+    x = jax.random.normal(jax.random.PRNGKey(1), (2, 16, cfg.d_model))
+    y1, a1 = moe_mod.moe_apply(p, cfg, x)
+    with shd.use_mesh(make_host_mesh()):
+        y2, a2 = jax.jit(lambda p_, x_: moe_mod.moe_apply_ep(p_, cfg, x_))(p, x)
+    assert float(jnp.max(jnp.abs(y1 - y2))) < 1e-4
+    assert abs(float(a1) - float(a2)) < 1e-3

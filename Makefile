@@ -1,0 +1,17 @@
+# Tier-1 verify + benchmark entry points (see ROADMAP.md).
+PY ?= python
+export PYTHONPATH := src$(if $(PYTHONPATH),:$(PYTHONPATH))
+
+.PHONY: check bench bench-quick bench-scenarios
+
+check:
+	$(PY) -m pytest -x -q
+
+bench:
+	$(PY) -m benchmarks.run
+
+bench-quick:
+	REPRO_BENCH_QUICK=1 $(PY) -m benchmarks.run
+
+bench-scenarios:
+	$(PY) -m benchmarks.run --only scenarios

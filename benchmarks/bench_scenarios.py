@@ -1,0 +1,52 @@
+"""Scenario engine throughput: us-per-day for the reference Python hour-loop
+vs. the compiled lax.scan day vs. the vmapped scenario-suite batch.
+
+Rows (name, us_per_call = us per simulated day, derived):
+  scenarios/day_loop_<t>   — seed-style Python loop (jitted per-epoch solver)
+  scenarios/day_scan_<t>   — one jitted lax.scan call per day
+  scenarios/day_batch_<t>  — run_days_batched over the full stress suite
+"""
+from __future__ import annotations
+
+from repro import scenarios as S
+from repro.core import schedulers as SCH
+from repro.core.force_directed import FDConfig
+from repro.core.nash import NashConfig
+from repro.dcsim import env as E
+
+from .common import HOURS, QUICK, Timer, emit
+
+CFGS = {"fd": FDConfig(iters=60), "nash": NashConfig(sweeps=3, inner_steps=20)}
+
+
+def run(rows):
+    env = E.build_env(4, seed=0)
+    suite = S.build_suite("stress", env)
+    envs = [e for _, e in suite]
+    n = len(envs)
+    techniques = ("fd",) if QUICK else ("fd", "nash")
+
+    for t in techniques:
+        cfg = CFGS[t]
+        kw = dict(objective="carbon", seed=0, hours=HOURS, cfg_override=cfg)
+
+        SCH.run_day(env, t, engine="loop", **kw)  # warm the per-epoch jit
+        with Timer() as tm:
+            res_loop = SCH.run_day(env, t, engine="loop", **kw)
+        loop_s = tm.seconds
+        emit(rows, f"scenarios/day_loop_{t}", loop_s,
+             f"carbon={res_loop['totals']['carbon_kg']:.0f}kg")
+
+        SCH.run_day(env, t, engine="scan", **kw)  # warm the day jit
+        with Timer() as tm:
+            res_scan = SCH.run_day(env, t, engine="scan", **kw)
+        scan_s = tm.seconds
+        emit(rows, f"scenarios/day_scan_{t}", scan_s,
+             f"speedup_vs_loop={loop_s / max(scan_s, 1e-9):.0f}x")
+
+        bkw = dict(objective="carbon", seeds=[0] * n, hours=HOURS, cfg_override=cfg)
+        SCH.run_days_batched(envs, t, **bkw)  # warm the vmapped jit
+        with Timer() as tm:
+            SCH.run_days_batched(envs, t, **bkw)
+        emit(rows, f"scenarios/day_batch_{t}", tm.seconds / n,
+             f"days={n};speedup_vs_loop={loop_s / max(tm.seconds / n, 1e-9):.0f}x")

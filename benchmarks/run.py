@@ -11,7 +11,8 @@ import argparse
 import sys
 import time
 
-ALL = ("carbon", "scalability", "arrival", "renewables", "costs", "roofline", "micro")
+ALL = ("carbon", "scalability", "arrival", "renewables", "costs", "scenarios",
+       "roofline", "micro")
 
 
 def main() -> None:
@@ -41,6 +42,9 @@ def main() -> None:
     if "costs" in which:
         from . import bench_costs
         bench_costs.run(rows)
+    if "scenarios" in which:
+        from . import bench_scenarios
+        bench_scenarios.run(rows)
     if "roofline" in which:
         from . import bench_roofline
         bench_roofline.run(rows)

@@ -17,7 +17,9 @@ def main():
     ap = argparse.ArgumentParser()
     ap.add_argument("--objective", choices=("carbon", "cost"), default="carbon")
     ap.add_argument("--dcs", type=int, default=4, choices=(4, 8, 16))
-    ap.add_argument("--pattern", choices=("sinusoidal", "flat"), default="sinusoidal")
+    ap.add_argument("--pattern", choices=("sinusoidal", "flat", "weekday",
+                                          "weekend", "bursty"),
+                    default="sinusoidal")
     ap.add_argument("--techniques", default=",".join(TECHNIQUES))
     args = ap.parse_args()
 

@@ -62,8 +62,13 @@ def uniform_fractions(ctx: GameContext) -> jnp.ndarray:
 
 
 def capacity_fractions(ctx: GameContext) -> jnp.ndarray:
-    """ER-proportional start (a natural feasible point)."""
-    return ctx.env.er / jnp.sum(ctx.env.er, axis=1, keepdims=True)
+    """Effective-ER-proportional start (a natural feasible point).
+
+    Uses the hour's ER·avail so scenario outage/curtailment windows get no
+    initial mass; reduces to ER-proportional when avail ≡ 1.
+    """
+    er_t = E.capacity_at(ctx.env, ctx.tau)
+    return er_t / jnp.maximum(jnp.sum(er_t, axis=1, keepdims=True), 1e-9)
 
 
 def player_rewards(

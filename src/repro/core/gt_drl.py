@@ -44,7 +44,7 @@ def _ctx_features(env: E.EnvParams, tau, i) -> jnp.ndarray:
     feats = [
         env.er[i] / jnp.max(env.er[i]),
         dmax / (jnp.max(jnp.abs(dmax)) + 1e-9),
-        env.carbon / jnp.max(env.carbon),
+        env.carbon[:, tau] / jnp.max(env.carbon[:, tau]),
         env.eprice[:, tau] / jnp.max(env.eprice[:, tau]),
         env.rp[:, tau] / (jnp.max(env.rp[:, tau]) + 1e-9),
     ]

@@ -1,23 +1,45 @@
-"""Unified scheduler registry + the 24-epoch day simulation harness.
+"""Unified scheduler registry + the compiled day-simulation engine.
 
 Every technique exposes ``solve_epoch(key, ctx, peak_state) -> SolveResult``;
 ``run_day`` drives any of them through the paper's experimental protocol:
 24 one-hour epochs, monthly peak-demand state threaded through, metrics
 from the *detailed* simulator (not the optimization estimate).
+
+Two engines share that protocol:
+
+- ``engine="scan"`` (default): the whole day is ONE jitted call — a
+  ``lax.scan`` over epochs with (rng key, peak state, solver state) in the
+  carry. Because the day is a single pure function of ``(env, key, peak0,
+  state0)``, it vmaps across environments: ``run_days_batched`` evaluates a
+  whole scenario suite × seeds fleet (``repro.scenarios``) in one compile.
+- ``engine="loop"``: the seed Python hour-loop, kept as the reference
+  implementation (and used automatically when a prebuilt stateful
+  ``solver`` closure is passed, as ``compare_techniques`` does for
+  deploy-once GT-DRL semantics). Both engines produce matching metrics for
+  the same technique/seed.
 """
 from __future__ import annotations
 
 import functools
-from typing import Any, Callable, Dict, List, Optional, Tuple
+from typing import Any, Callable, Dict, List, Optional, Sequence, Tuple
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 
 from ..dcsim import env as E
 from . import ddpg, force_directed, genetic, gt_drl, nash, ppo_joint
-from .game import GameContext, SolveResult, capacity_fractions, fractions_to_ar
+from .game import GameContext, SolveResult, fractions_to_ar
 
 TECHNIQUES = ("fd", "ga", "nash", "ddpg", "ppo", "gt-drl")
+
+_MODS = {"fd": (force_directed, force_directed.FDConfig()),
+         "ga": (genetic, genetic.GAConfig()),
+         "nash": (nash, nash.NashConfig()),
+         "ddpg": (ddpg, ddpg.DDPGConfig()),
+         "ppo": (ppo_joint, ppo_joint.JointPPOConfig())}
+
+_TOTAL_KEYS = ("carbon_kg", "cost_usd", "violation")
 
 
 class GTDRLScheduler:
@@ -44,13 +66,8 @@ def get_scheduler(name: str, env: E.EnvParams, objective: str,
                   pretrain_key=None, **overrides) -> Callable:
     """Returns solve_epoch(key, ctx, peak_state) -> SolveResult, jitted so a
     24-epoch day compiles once (GameContext is a pytree; tau is traced)."""
-    mods = {"fd": (force_directed, force_directed.FDConfig()),
-            "ga": (genetic, genetic.GAConfig()),
-            "nash": (nash, nash.NashConfig()),
-            "ddpg": (ddpg, ddpg.DDPGConfig()),
-            "ppo": (ppo_joint, ppo_joint.JointPPOConfig())}
-    if name in mods:
-        mod, default_cfg = mods[name]
+    if name in _MODS:
+        mod, default_cfg = _MODS[name]
         cfg = overrides.get("cfg", default_cfg)
         return jax.jit(functools.partial(mod.solve_epoch, cfg=cfg))
     if name == "gt-drl":
@@ -58,6 +75,168 @@ def get_scheduler(name: str, env: E.EnvParams, objective: str,
         return sched.solve_epoch
     raise KeyError(f"unknown technique {name!r}; known: {TECHNIQUES}")
 
+
+# ---------------------------------------------------------------------------
+# compiled day engine: one lax.scan over epochs == one jitted call per day
+# ---------------------------------------------------------------------------
+
+def _solver_step(technique: str, cfg) -> Callable:
+    """step(key, state, ctx, peak) -> (state, SolveResult); state threads the
+    scan carry (per-player agents for gt-drl, () for stateless solvers)."""
+    if technique == "gt-drl":
+        cfg = cfg or gt_drl.GTDRLConfig()
+
+        def step(key, agents, ctx, peak):
+            return gt_drl.solve_epoch(key, agents, ctx, peak, cfg)
+        return step
+    if technique not in _MODS:
+        raise KeyError(f"unknown technique {technique!r}; known: {TECHNIQUES}")
+    mod, default_cfg = _MODS[technique]
+    cfg = cfg or default_cfg
+
+    def step(key, state, ctx, peak):
+        return state, mod.solve_epoch(key, ctx, peak, cfg=cfg)
+    return step
+
+
+@functools.lru_cache(maxsize=None)
+def _day_core(technique: str, objective: str, hours: int, cfg) -> Callable:
+    """day(env, key, peak0, state0) -> (peak, state, metrics (hours,)-dict).
+
+    Pure and jit/vmap-friendly; the RNG key is split exactly as the
+    reference loop does, so both engines see the same per-epoch keys.
+    """
+    step = _solver_step(technique, cfg)
+
+    def day(env: E.EnvParams, key, peak0, state0):
+        def body(carry, tau):
+            key, peak, state = carry
+            key, ks = jax.random.split(key)
+            ctx = GameContext(env=env, tau=tau, objective=objective)
+            state, res = step(ks, state, ctx, peak)
+            ar = fractions_to_ar(ctx, res.fractions)
+            peak, m = E.step_epoch(env, peak, ar, tau)
+            return (key, peak, state), m
+
+        (_, peak, state), ms = jax.lax.scan(
+            body, (key, peak0, state0), jnp.arange(hours, dtype=jnp.int32))
+        return peak, state, ms
+
+    return day
+
+
+@functools.lru_cache(maxsize=None)
+def _compiled_day(technique: str, objective: str, hours: int, cfg) -> Callable:
+    return jax.jit(_day_core(technique, objective, hours, cfg))
+
+
+@functools.lru_cache(maxsize=None)
+def _compiled_batch(technique: str, objective: str, hours: int, cfg) -> Callable:
+    """One compile for a whole fleet: vmap the day core over (env, key)."""
+    core = _day_core(technique, objective, hours, cfg)
+    return jax.jit(jax.vmap(core, in_axes=(0, 0, None, None)))
+
+
+def _day_inputs(env, technique, objective, seed, pretrain, cfg):
+    """Replicates the reference loop's key discipline + initial solver state."""
+    key = jax.random.PRNGKey(seed)
+    kp, key = jax.random.split(key)
+    if technique == "gt-drl":
+        c = cfg or gt_drl.GTDRLConfig()
+        state0 = (gt_drl.pretrain(kp, env, objective, c) if pretrain
+                  else gt_drl.init_agents(jax.random.PRNGKey(0), env, c))
+    else:
+        state0 = ()
+    return key, state0
+
+
+def _format_day(ms, hours: int, technique: str, objective: str) -> Dict[str, Any]:
+    """Stacked (hours,) metric arrays -> the run_day result dict."""
+    host = {k: np.asarray(v).astype(float).tolist() for k, v in ms.items()}
+    per_epoch = [{**{k: host[k][t] for k in host}, "tau": t} for t in range(hours)]
+    totals = {k: 0.0 for k in _TOTAL_KEYS}
+    for row in per_epoch:
+        for k in totals:
+            totals[k] += row[k]
+    return {"per_epoch": per_epoch, "totals": totals, "technique": technique,
+            "objective": objective}
+
+
+def run_day_scan(
+    env: E.EnvParams,
+    technique: str,
+    objective: str = "carbon",
+    *,
+    seed: int = 0,
+    hours: int = 24,
+    pretrain: bool = True,
+    peak_state0: Optional[jnp.ndarray] = None,
+    cfg_override: Any = None,
+) -> Dict[str, Any]:
+    """One technique through a day as a single jitted lax.scan call."""
+    key, state0 = _day_inputs(env, technique, objective, seed, pretrain, cfg_override)
+    peak0 = peak_state0 if peak_state0 is not None else jnp.zeros((E.num_dcs(env),))
+    day = _compiled_day(technique, objective, hours, cfg_override)
+    _, _, ms = day(env, key, peak0, state0)
+    return _format_day(ms, hours, technique, objective)
+
+
+def stack_envs(envs: Sequence[E.EnvParams]) -> E.EnvParams:
+    """Stack same-shape envs leaf-wise into one batched EnvParams."""
+    return jax.tree_util.tree_map(lambda *xs: jnp.stack(xs), *envs)
+
+
+def run_days_batched(
+    envs,
+    technique: str,
+    objective: str = "carbon",
+    *,
+    seeds: Optional[Sequence[int]] = None,
+    hours: int = 24,
+    pretrain: bool = True,
+    cfg_override: Any = None,
+) -> Dict[str, Any]:
+    """Evaluate a fleet of scenario-days in ONE compiled vmapped call.
+
+    ``envs``: a list of same-shape EnvParams (e.g. a materialized scenario
+    suite) or an already-stacked batched EnvParams. ``seeds`` defaults to
+    ``range(n)`` — one RNG stream per day, split exactly like ``run_day``.
+    GT-DRL pretrains once (deploy-once) and the agents are broadcast.
+
+    Returns ``{"totals": {k: (n,)}, "per_epoch": {k: (n, hours)}}`` numpy
+    arrays plus bookkeeping fields.
+    """
+    if isinstance(envs, E.EnvParams) and envs.er.ndim == 2:
+        envs = [envs]  # single env == batch of one (compare_techniques parity)
+    if isinstance(envs, E.EnvParams):
+        env_b, n = envs, int(envs.er.shape[0])
+        env0 = jax.tree_util.tree_map(lambda x: x[0], envs)
+    else:
+        envs = list(envs)
+        env_b, n = stack_envs(envs), len(envs)
+        env0 = envs[0]
+    seeds = list(range(n)) if seeds is None else list(seeds)
+    if len(seeds) != n:
+        raise ValueError(f"{len(seeds)} seeds for {n} scenario-days")
+
+    # per-day keys split exactly as run_day splits them; gt-drl pretrains
+    # ONCE on the first seed's pretrain key (deploy-once semantics)
+    keys = jnp.stack([jax.random.split(jax.random.PRNGKey(s))[1] for s in seeds])
+    _, state0 = _day_inputs(env0, technique, objective, seeds[0], pretrain,
+                            cfg_override)
+    peak0 = jnp.zeros((E.num_dcs(env0),))
+
+    batch = _compiled_batch(technique, objective, hours, cfg_override)
+    _, _, ms = batch(env_b, keys, peak0, state0)
+    out = {k: np.asarray(v) for k, v in ms.items()}  # (n, hours) each
+    totals = {k: out[k].sum(axis=1) for k in _TOTAL_KEYS}
+    return {"totals": totals, "per_epoch": out, "technique": technique,
+            "objective": objective, "seeds": seeds}
+
+
+# ---------------------------------------------------------------------------
+# day protocol entry points
+# ---------------------------------------------------------------------------
 
 def run_day(
     env: E.EnvParams,
@@ -70,8 +249,20 @@ def run_day(
     peak_state0: Optional[jnp.ndarray] = None,
     cfg_override: Any = None,
     solver: Optional[Callable] = None,
+    engine: str = "scan",
 ) -> Dict[str, Any]:
-    """Run one technique through a day; returns per-epoch + total metrics."""
+    """Run one technique through a day; returns per-epoch + total metrics.
+
+    ``engine="scan"`` compiles the whole day into one call; ``"loop"`` is
+    the reference Python hour-loop. A prebuilt ``solver`` closure forces the
+    loop engine (the closure may carry state across calls/runs).
+    """
+    if engine not in ("scan", "loop"):
+        raise ValueError(f"unknown engine {engine!r}; known: scan, loop")
+    if solver is None and engine == "scan":
+        return run_day_scan(env, technique, objective, seed=seed, hours=hours,
+                            pretrain=pretrain, peak_state0=peak_state0,
+                            cfg_override=cfg_override)
     key = jax.random.PRNGKey(seed)
     kp, key = jax.random.split(key)
     if solver is None:
@@ -83,7 +274,7 @@ def run_day(
     d = E.num_dcs(env)
     peak = peak_state0 if peak_state0 is not None else jnp.zeros((d,))
     per_epoch: List[Dict[str, float]] = []
-    totals = {"carbon_kg": 0.0, "cost_usd": 0.0, "violation": 0.0}
+    totals = {k: 0.0 for k in _TOTAL_KEYS}
     for tau in range(hours):
         key, ks = jax.random.split(key)
         ctx = GameContext(env=env, tau=jnp.int32(tau), objective=objective)
@@ -110,8 +301,6 @@ def compare_techniques(
     """The paper's protocol: several runs (one env per resampled arrival
     pattern), mean±stderr of daily totals. GT-DRL agents pretrain once on the
     first env and are reused across runs (deploy-once semantics)."""
-    import numpy as np
-
     if isinstance(envs, E.EnvParams):
         envs = [envs]
     out: Dict[str, Dict[str, Any]] = {}

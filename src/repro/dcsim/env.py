@@ -1,12 +1,20 @@
 """The geo-distributed cloud environment: paper eqs. (1)–(18) in JAX.
 
 Everything is a pure function of an ``EnvParams`` NamedTuple of jnp arrays,
-so objectives are jittable, vmappable (batched game episodes) and
-differentiable (the NASH best-reply baseline exploits the gradients).
+so objectives are jittable, vmappable (batched game episodes, and the
+scenario engine's ``run_days_batched`` fleet evaluation) and differentiable
+(the NASH best-reply baseline exploits the gradients).
 
 Shapes: I task types × D data centers × 24 UTC hours.
 Units: power W, energy cost $/h (prices $/kWh applied to W/1000),
 carbon kg/h, rates tasks/hour.
+
+Beyond-paper extensions for the scenario engine (``repro.scenarios``):
+``carbon`` carries an hourly axis (D, 24) so grid carbon-intensity events
+(spikes, diurnal marginal-carbon shapes) are expressible, and ``avail``
+(D, 24) masks per-DC capacity over the day (outages, demand-response
+curtailment). With ``avail == 1`` and a constant carbon profile the model
+reduces exactly to the paper's.
 """
 from __future__ import annotations
 
@@ -28,7 +36,7 @@ class EnvParams(NamedTuple):
     tsupply: jnp.ndarray     # (D,) CRAC supply temperature °C
     eff: jnp.ndarray         # (D,) PSU overhead ≥ 1
     rp: jnp.ndarray          # (D, 24) renewable W
-    carbon: jnp.ndarray      # (D,) kg CO2 / kWh
+    carbon: jnp.ndarray      # (D, 24) kg CO2 / kWh (hourly grid intensity)
     eprice: jnp.ndarray      # (D, 24) $/kWh TOU
     peak_price: jnp.ndarray  # (D,) $/kW-month
     alpha: jnp.ndarray       # (D,) net metering fraction
@@ -36,6 +44,7 @@ class EnvParams(NamedTuple):
     sizes: jnp.ndarray       # (I,) GB per task
     nn_total: jnp.ndarray    # (D,) node count
     car: jnp.ndarray         # (I, 24) cloud arrival rates
+    avail: jnp.ndarray       # (D, 24) capacity availability in [0, 1]
 
 
 # ---------------------------------------------------------------------------
@@ -86,19 +95,20 @@ def build_env(
     rp = rp * installed[:, None]
 
     sizes = np.array([t[2] for t in topology.TASK_TYPES])
-    # peak rate per type: w_i (Σw=1) of its own capacity × target utilization,
-    # so the *total* utilization Σ_i CAR_i/cap_i peaks near ``utilization``.
-    w = np.random.default_rng(1234).dirichlet(np.ones(er.shape[0]) * 3.0)
-    base = utilization * w * np.asarray(er).sum(axis=1)
+    # peak rate per type via workload.base_rates (one source of truth for the
+    # Dirichlet task mix): w_i (Σw=1) of its own capacity × utilization, so
+    # total utilization Σ_i CAR_i/cap_i peaks near ``utilization``.
+    base = workload.base_rates(np.asarray(er).sum(axis=1), utilization)
     car = workload.arrival_pattern(pattern, base, seed=seed)
 
     f = jnp.asarray
     return EnvParams(
         er=f(er), it_idle=f(it_idle), it_dyn=f(it_dyn), tsupply=f(tsupply),
-        eff=f(eff), rp=f(rp), carbon=f(carbon), eprice=f(eprice),
-        peak_price=f(peak_price), alpha=f(alpha),
+        eff=f(eff), rp=f(rp), carbon=f(np.tile(carbon[:, None], (1, 24))),
+        eprice=f(eprice), peak_price=f(peak_price), alpha=f(alpha),
         nprice=jnp.float32(NETWORK_PRICE), sizes=f(sizes),
         nn_total=f(nn.sum(axis=1).astype(float)), car=f(car),
+        avail=jnp.ones((num_dcs, 24)),
     )
 
 
@@ -110,13 +120,22 @@ def num_dcs(env: EnvParams) -> int:
     return env.er.shape[1]
 
 
+def capacity_at(env: EnvParams, tau) -> jnp.ndarray:
+    """Effective (I, D) execution-rate ceiling ER·avail at hour tau.
+
+    ``avail`` models outages / demand-response curtailment as a fraction of
+    each DC's nodes being powered; the paper's setting is avail ≡ 1.
+    """
+    return env.er * env.avail[:, tau][None, :]
+
+
 # ---------------------------------------------------------------------------
 # paper objective functions
 # ---------------------------------------------------------------------------
 
 def dp_max_t(env: EnvParams, tau) -> jnp.ndarray:
     """DP_max[d] at hour tau (eq. 9)."""
-    it = env.it_idle + env.it_dyn
+    it = (env.it_idle + env.it_dyn) * env.avail[:, tau]
     crac = jnp.minimum(it / power_cop(env), CRAC_PER_DC * CRAC_MAX_W)
     return (it + crac) * env.eff - env.rp[:, tau]
 
@@ -128,13 +147,13 @@ def power_cop(env: EnvParams) -> jnp.ndarray:
 
 def dp_est(env: EnvParams, ar: jnp.ndarray, tau) -> jnp.ndarray:
     """DP_est[i, d] (eq. 10): share of DP_max by rate fraction."""
-    frac = ar / jnp.maximum(env.er, 1e-9)
+    frac = ar / jnp.maximum(capacity_at(env, tau), 1e-9)
     return dp_max_t(env, tau)[None, :] * frac
 
 
 def cet_est(env: EnvParams, ar: jnp.ndarray, tau) -> jnp.ndarray:
     """CET[i] (eqs. 11–12): estimated cloud carbon per player, kg/h."""
-    de = env.carbon[None, :] * dp_est(env, ar, tau) / 1000.0
+    de = env.carbon[:, tau][None, :] * dp_est(env, ar, tau) / 1000.0
     return jnp.sum(de, axis=1)
 
 
@@ -151,8 +170,9 @@ def nc_est(env: EnvParams, ar: jnp.ndarray) -> jnp.ndarray:
 
 def grid_power(env: EnvParams, ar: jnp.ndarray, tau) -> jnp.ndarray:
     """Detailed net DC power DP[d] (eq. 4) for a full assignment."""
-    rho = jnp.sum(ar / jnp.maximum(env.er, 1e-9), axis=0)  # (D,)
-    it = env.it_idle + env.it_dyn * jnp.clip(rho, 0.0, 1.0)
+    rho = jnp.sum(ar / jnp.maximum(capacity_at(env, tau), 1e-9), axis=0)  # (D,)
+    a = env.avail[:, tau]
+    it = (env.it_idle + env.it_dyn * jnp.clip(rho, 0.0, 1.0)) * a
     crac = jnp.minimum(it / power_cop(env), CRAC_PER_DC * CRAC_MAX_W)
     return (it + crac) * env.eff - env.rp[:, tau]
 
@@ -194,29 +214,33 @@ def player_reward(env, ar, tau, peak_state, objective: str) -> jnp.ndarray:
 def feasible_violation(env: EnvParams, ar: jnp.ndarray, tau) -> jnp.ndarray:
     """Aggregate constraint violation (0 when feasible)."""
     split = jnp.abs(jnp.sum(ar, axis=1) - env.car[:, tau])  # eq. (1)
-    over = jnp.maximum(ar - env.er, 0.0)                    # eq. (2)
+    over = jnp.maximum(ar - capacity_at(env, tau), 0.0)     # eq. (2)
     return jnp.sum(split) + jnp.sum(over)
 
 
 def project_feasible(env: EnvParams, fractions: jnp.ndarray, tau) -> jnp.ndarray:
     """Map simplex fractions (I, D) → feasible AR (both constraints).
 
-    Rates beyond a DC's ER are redistributed to DCs with headroom
+    Rates beyond a DC's effective ER (ER·avail, so outage/curtailment
+    windows shed correctly) are redistributed to DCs with headroom
     (iterative water-filling, 4 rounds is enough at <=60% utilization).
+    If the whole fleet lacks headroom the residual is dropped — eq. (1)
+    then reports the shed load as violation, which is physically right.
     """
     car = env.car[:, tau]
+    er_t = capacity_at(env, tau)
     ar = fractions * car[:, None]
 
     def body(ar, _):
-        over = jnp.maximum(ar - env.er, 0.0)
+        over = jnp.maximum(ar - er_t, 0.0)
         ar = ar - over
-        head = jnp.maximum(env.er - ar, 0.0)
+        head = jnp.maximum(er_t - ar, 0.0)
         w = head / jnp.maximum(jnp.sum(head, axis=1, keepdims=True), 1e-9)
         ar = ar + jnp.sum(over, axis=1, keepdims=True) * w
         return ar, None
 
     ar, _ = jax.lax.scan(body, ar, None, length=4)
-    return jnp.minimum(ar, env.er)
+    return jnp.minimum(ar, er_t)
 
 
 # ---------------------------------------------------------------------------
@@ -228,14 +252,14 @@ def step_epoch(
 ) -> Tuple[jnp.ndarray, Dict[str, jnp.ndarray]]:
     """Simulate one epoch under assignment ``ar``; returns (new_peak, metrics)."""
     dp = grid_power(env, ar, tau)  # (D,) W, can be negative
-    de = env.carbon * dp / 1000.0  # kg/h (negative = displaced grid carbon)
+    de = env.carbon[:, tau] * dp / 1000.0  # kg/h (negative = displaced grid carbon)
     a = jnp.where(dp > 0, 1.0, env.alpha)
     energy_cost = env.eprice[:, tau] * a * dp / 1000.0
     delta, new_peak = peak_increase(env, ar, tau, peak_state)
     net_cost = jnp.sum(env.nprice * env.sizes[:, None] * ar, axis=0) / 1000.0
     total_cost = energy_cost + delta + net_cost
     viol = feasible_violation(env, ar, tau)
-    rho = jnp.sum(ar / jnp.maximum(env.er, 1e-9), axis=0)
+    rho = jnp.sum(ar / jnp.maximum(capacity_at(env, tau), 1e-9), axis=0)
     metrics = {
         "carbon_kg": jnp.sum(de),
         "cost_usd": jnp.sum(total_cost),

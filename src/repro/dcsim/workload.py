@@ -1,30 +1,46 @@
-"""Workload arrival-rate patterns (paper §6, Fig. 6).
+"""Workload arrival-rate patterns (paper §6, Fig. 6) — the single source of
+truth for cloud arrival-rate construction.
 
-Sinusoidal (consumer-interactive) and flat (continuous-compute) cloud-level
-arrival rates per task type, plus the per-run normal resampling the paper
-uses (mean = pattern value, std = 20% of mean).
+Patterns: sinusoidal (consumer-interactive), flat (continuous-compute), plus
+the beyond-paper shapes used by the scenario engine (`repro.scenarios`):
+weekday (double-hump business hours), weekend (late, lower peak) and bursty
+(flat base with seeded spike trains). Per-run normal resampling follows the
+paper (mean = pattern value, std = 20% of mean).
+
+``build_env`` and every scenario transform route through ``base_rates`` /
+``arrival_pattern`` so arrival construction is never re-implemented inline.
 """
 from __future__ import annotations
 
 import numpy as np
 
-from .topology import NUM_TASK_TYPES
+PATTERNS = ("sinusoidal", "flat", "weekday", "weekend", "bursty")
 
 
-def base_rates(num_dcs: int, utilization: float = 0.45) -> np.ndarray:
+def base_rates(
+    capacity: np.ndarray,
+    utilization: float = 0.45,
+    *,
+    concentration: float = 3.0,
+    weight_seed: int = 1234,
+) -> np.ndarray:
     """Peak cloud arrival rate per task type (tasks/hour).
 
-    Scaled so that at the daily peak the cloud runs at roughly
-    ``utilization`` of aggregate capacity (the paper's under-subscribed
-    regime) — the env builder rescales against actual capacity.
+    ``capacity`` is the aggregate per-type execution rate ER.sum(axis=1),
+    shape (I,). Each type gets a Dirichlet share w_i (Σw=1, fixed
+    ``weight_seed`` so the task mix is infrastructure-stable across runs)
+    of its own capacity × ``utilization``, so total utilization
+    Σ_i CAR_i/cap_i peaks near ``utilization`` (the paper's
+    under-subscribed regime).
     """
-    rng = np.random.default_rng(1234)
-    w = rng.dirichlet(np.ones(NUM_TASK_TYPES) * 3.0)
-    return w * utilization * num_dcs
+    capacity = np.asarray(capacity, dtype=float)
+    rng = np.random.default_rng(weight_seed)
+    w = rng.dirichlet(np.ones(capacity.shape[0]) * concentration)
+    return utilization * w * capacity
 
 
 def arrival_pattern(
-    kind: str,           # "sinusoidal" | "flat"
+    kind: str,           # one of PATTERNS
     base: np.ndarray,    # (I,) peak rates
     seed: int = 0,
     resample: bool = True,
@@ -37,10 +53,34 @@ def arrival_pattern(
         shape = 0.65 + 0.35 * np.sin((hours - 14.0) / 24.0 * 2 * np.pi)
     elif kind == "flat":
         shape = np.full(24, 0.82)
+    elif kind == "weekday":
+        # business double-hump: morning and afternoon peaks, lunch dip
+        am = np.exp(-0.5 * ((hours - 15.0) / 2.2) ** 2)
+        pm = np.exp(-0.5 * ((hours - 21.0) / 2.6) ** 2)
+        shape = 0.40 + 0.55 * np.maximum(am, pm)
+    elif kind == "weekend":
+        # later, flatter leisure peak at ~60% weekday volume
+        shape = 0.35 + 0.25 * np.sin((hours - 17.0) / 24.0 * 2 * np.pi)
+    elif kind == "bursty":
+        # low base + a seeded train of short 2-3.3x spikes (flash-crowd-like);
+        # base is low enough that spike magnitudes survive the capacity cap
+        rng = np.random.default_rng(seed + 7331)
+        shape = np.full(24, 0.30)
+        for _ in range(rng.integers(2, 5)):
+            t0 = int(rng.integers(0, 24))
+            width = int(rng.integers(1, 4))
+            mag = float(rng.uniform(2.0, 3.3))
+            shape[[(t0 + k) % 24 for k in range(width)]] *= mag
+        shape = np.minimum(shape, 1.0)  # stay inside capacity headroom
     else:  # pragma: no cover
-        raise ValueError(kind)
+        raise ValueError(f"unknown arrival pattern {kind!r}; known: {PATTERNS}")
     car = base[:, None] * shape[None, :]
     if resample:
-        rng = np.random.default_rng(seed)
-        car = np.clip(rng.normal(car, 0.2 * car), 0.05 * car, None)
+        car = resample_car(car, seed)
     return car
+
+
+def resample_car(car: np.ndarray, seed: int, std: float = 0.2) -> np.ndarray:
+    """The paper's per-run variation: CAR ~ N(CAR, std·CAR), floored at 5%."""
+    rng = np.random.default_rng(seed)
+    return np.clip(rng.normal(car, std * car), 0.05 * car, None)

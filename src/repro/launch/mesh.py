@@ -16,15 +16,21 @@ import jax
 from jax.sharding import Mesh
 
 
+def _mesh(shape, axes) -> Mesh:
+    # jax.sharding.AxisType landed after 0.4.x; older jax defaults every
+    # axis to Auto already, so only pass axis_types when it exists.
+    axis_type = getattr(jax.sharding, "AxisType", None)
+    if axis_type is not None:
+        return jax.make_mesh(shape, axes, axis_types=(axis_type.Auto,) * len(axes))
+    return jax.make_mesh(shape, axes)
+
+
 def make_production_mesh(*, multi_pod: bool = False) -> Mesh:
     shape = (2, 16, 16) if multi_pod else (16, 16)
     axes = ("pod", "data", "model") if multi_pod else ("data", "model")
-    return jax.make_mesh(
-        shape, axes, axis_types=(jax.sharding.AxisType.Auto,) * len(axes)
-    )
+    return _mesh(shape, axes)
 
 
 def make_host_mesh() -> Mesh:
     """Single-device mesh for CPU tests."""
-    return jax.make_mesh((1, 1), ("data", "model"),
-                         axis_types=(jax.sharding.AxisType.Auto,) * 2)
+    return _mesh((1, 1), ("data", "model"))

@@ -1,0 +1,15 @@
+"""Scenario engine: composable EnvParams transforms + named stress suites.
+
+See ``registry`` (the Scenario spec and transform registry), ``transforms``
+(the ≥7 built-in event families) and ``suites`` (named suites sized for the
+batched day engine ``repro.core.schedulers.run_days_batched``).
+"""
+from . import transforms  # noqa: F401  (imports register the built-ins)
+from .registry import (Scenario, Transform, apply_all, compose, get, make,
+                       names, register)
+from .suites import SUITES, build_suite, suite_names
+
+__all__ = [
+    "Scenario", "Transform", "apply_all", "compose", "get", "make", "names",
+    "register", "SUITES", "build_suite", "suite_names",
+]

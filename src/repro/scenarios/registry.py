@@ -1,0 +1,80 @@
+"""Scenario registry: named, parameterized, composable EnvParams transforms.
+
+A *transform* is a pure function ``EnvParams -> EnvParams`` (same shapes and
+dtypes in and out, deterministic given its parameters — any randomness is
+driven by an explicit ``seed`` parameter). A *factory* builds a transform
+from keyword parameters; factories are registered by name so scenarios can
+be specified, serialized and round-tripped as plain ``(name, params)`` data
+(the ``Scenario`` spec below), then composed into named suites
+(``repro.scenarios.suites``).
+
+    >>> t = make("flash_crowd", start=18, duration=3, magnitude=3.0)
+    >>> stressed = t(env)                       # pure, repeatable
+    >>> s = Scenario("dc_outage", {"dc": 0})
+    >>> s.apply(env)                            # round-trips by name
+"""
+from __future__ import annotations
+
+from typing import Any, Callable, Dict, Mapping, NamedTuple, Tuple
+
+from ..dcsim.env import EnvParams
+
+Transform = Callable[[EnvParams], EnvParams]
+Factory = Callable[..., Transform]
+
+_REGISTRY: Dict[str, Factory] = {}
+
+
+def register(name: str) -> Callable[[Factory], Factory]:
+    """Decorator: register a transform factory under ``name``."""
+    def deco(factory: Factory) -> Factory:
+        if name in _REGISTRY:
+            raise KeyError(f"scenario transform {name!r} already registered")
+        _REGISTRY[name] = factory
+        return factory
+    return deco
+
+
+def get(name: str) -> Factory:
+    try:
+        return _REGISTRY[name]
+    except KeyError:
+        raise KeyError(
+            f"unknown scenario transform {name!r}; known: {names()}") from None
+
+
+def names() -> Tuple[str, ...]:
+    return tuple(sorted(_REGISTRY))
+
+
+def make(name: str, **params: Any) -> Transform:
+    """Build the named transform with ``params`` (round-trip of a spec)."""
+    return get(name)(**params)
+
+
+def compose(*transforms: Transform) -> Transform:
+    """Left-to-right composition: compose(f, g)(env) == g(f(env))."""
+    def composed(env: EnvParams) -> EnvParams:
+        for t in transforms:
+            env = t(env)
+        return env
+    return composed
+
+
+class Scenario(NamedTuple):
+    """Serializable (name, params) spec for one registered transform."""
+    name: str
+    params: Mapping[str, Any] = {}
+
+    def build(self) -> Transform:
+        return make(self.name, **dict(self.params))
+
+    def apply(self, env: EnvParams) -> EnvParams:
+        return self.build()(env)
+
+
+def apply_all(env: EnvParams, scenarios) -> EnvParams:
+    """Apply a sequence of Scenario specs (or transforms) in order."""
+    for s in scenarios:
+        env = s.apply(env) if isinstance(s, Scenario) else s(env)
+    return env

@@ -1,0 +1,63 @@
+"""Named scenario suites: ordered maps of scenario-day name → Scenario list.
+
+A suite row composes registered transforms (left to right) onto a base env;
+``build_suite`` materializes the envs, all with identical shapes so they can
+be stacked and evaluated in one compile by ``schedulers.run_days_batched``.
+"""
+from __future__ import annotations
+
+from typing import Dict, List, Tuple
+
+from ..dcsim.env import EnvParams
+from .registry import Scenario, apply_all
+
+# Each suite: name -> ordered {scenario_day: [Scenario, ...]}.
+SUITES: Dict[str, Dict[str, List[Scenario]]] = {
+    # the paper's protocol: resampled arrival days, nothing else
+    "baseline": {
+        f"resample-{r}": [Scenario("arrival_resample", {"seed": r})]
+        for r in range(5)
+    },
+    # grid-side events only (scheduler sees unchanged traffic)
+    "grid_events": {
+        "carbon-spike": [Scenario("carbon_spike", {"start": 6, "duration": 8, "magnitude": 2.5})],
+        "carbon-diurnal": [Scenario("carbon_diurnal", {"amplitude": 0.35})],
+        "price-surge": [Scenario("price_surge", {"start": 14, "duration": 6, "magnitude": 2.2})],
+        "renewable-drought": [Scenario("renewable_drought", {"scale": 0.1})],
+        "demand-response": [Scenario("demand_response", {"dc": 1, "start": 16, "duration": 4, "curtail": 0.6})],
+    },
+    # the full stress family: traffic, infrastructure and grid events
+    "stress": {
+        "baseline": [Scenario("identity")],
+        "flash-crowd": [Scenario("flash_crowd", {"start": 18, "duration": 4, "magnitude": 3.0})],
+        "dc-outage": [Scenario("dc_outage", {"dc": 0, "start": 8, "duration": 6})],
+        "carbon-spike": [Scenario("carbon_spike", {"start": 6, "duration": 8, "magnitude": 2.5})],
+        "price-surge": [Scenario("price_surge", {"start": 14, "duration": 6, "magnitude": 2.2})],
+        "renewable-drought": [Scenario("renewable_drought", {"scale": 0.1})],
+        "demand-response": [Scenario("demand_response", {"dc": 1, "start": 16, "duration": 4, "curtail": 0.6})],
+        "weekend": [Scenario("traffic_pattern", {"kind": "weekend", "seed": 3})],
+        "bursty": [Scenario("traffic_pattern", {"kind": "bursty", "seed": 4})],
+        "grid-crunch": [
+            Scenario("carbon_spike", {"start": 12, "duration": 8, "magnitude": 2.0}),
+            Scenario("price_surge", {"start": 12, "duration": 8, "magnitude": 1.8}),
+            Scenario("renewable_drought", {"scale": 0.2}),
+        ],
+        "crowd-plus-outage": [
+            Scenario("flash_crowd", {"start": 17, "duration": 5, "magnitude": 2.5}),
+            Scenario("dc_outage", {"dc": 2, "start": 17, "duration": 5}),
+        ],
+    },
+}
+
+
+def suite_names() -> Tuple[str, ...]:
+    return tuple(SUITES)
+
+
+def build_suite(name: str, base_env: EnvParams) -> List[Tuple[str, EnvParams]]:
+    """Materialize (scenario_day, env) rows for the named suite."""
+    try:
+        rows = SUITES[name]
+    except KeyError:
+        raise KeyError(f"unknown suite {name!r}; known: {suite_names()}") from None
+    return [(day, apply_all(base_env, scenarios)) for day, scenarios in rows.items()]

@@ -1,0 +1,164 @@
+"""The scenario transform library: grid, infrastructure and traffic events.
+
+Each factory returns a pure ``EnvParams -> EnvParams`` transform (the stress
+families benchmarked in DCcluster-Opt, arXiv:2511.00117, and the perturbed
+heterogeneous regimes of Green-LLM, arXiv:2507.09942):
+
+- ``flash_crowd``        traffic surge in an hour window (× magnitude)
+- ``dc_outage``          one DC's capacity zeroed for a window (avail mask)
+- ``carbon_spike``       grid carbon-intensity surge in a window
+- ``carbon_diurnal``     marginal-carbon dip at local midday (solar on grid)
+- ``price_surge``        TOU price surge in a window (grid scarcity event)
+- ``renewable_drought``  on-site renewables scaled down (becalmed/overcast)
+- ``demand_response``    partial capacity curtailment in a window
+- ``traffic_pattern``    rebuild arrivals from a named workload pattern
+- ``arrival_resample``   the paper's per-run normal resampling of arrivals
+- ``identity``           no-op (baseline rows in suites)
+
+Windows are ``[start, start+duration)`` in UTC hours, wrapping modulo 24.
+All randomness flows through an explicit ``seed`` so a transform is a fixed
+function of its parameters; shapes and dtypes are always preserved.
+"""
+from __future__ import annotations
+
+from typing import Optional, Sequence
+
+import jax.numpy as jnp
+import numpy as np
+
+from ..dcsim import workload
+from ..dcsim.env import EnvParams
+from .registry import Transform, register
+
+
+def _window(start: int, duration: int) -> np.ndarray:
+    """(24,) float mask for [start, start+duration) mod 24."""
+    h = np.arange(24)
+    return (((h - start) % 24) < duration).astype(np.float64)
+
+
+def _rows(n: int, which: Optional[Sequence[int]]) -> np.ndarray:
+    """(n,) float row-selection mask (None = all rows)."""
+    m = np.zeros(n) if which is not None else np.ones(n)
+    if which is not None:
+        m[np.asarray(which)] = 1.0
+    return m
+
+
+def _scale_field(arr: jnp.ndarray, row_mask: np.ndarray, hour_mask: np.ndarray,
+                 factor: float) -> jnp.ndarray:
+    """Multiply arr (R, 24) by ``factor`` on selected rows × hours."""
+    mult = 1.0 + (factor - 1.0) * np.outer(row_mask, hour_mask)
+    return jnp.asarray(np.asarray(arr) * mult, arr.dtype)
+
+
+def _clip01(avail) -> jnp.ndarray:
+    """Keep the EnvParams invariant avail ∈ [0, 1] whatever the params."""
+    avail = jnp.asarray(avail)
+    return jnp.clip(avail, 0.0, 1.0).astype(avail.dtype)
+
+
+@register("identity")
+def identity() -> Transform:
+    return lambda env: env
+
+
+@register("flash_crowd")
+def flash_crowd(start: int = 18, duration: int = 3, magnitude: float = 3.0,
+                tasks: Optional[Sequence[int]] = None) -> Transform:
+    """Traffic surge: arrivals × magnitude in the window (all or some types)."""
+    def t(env: EnvParams) -> EnvParams:
+        mask = _rows(env.car.shape[0], tasks)
+        return env._replace(
+            car=_scale_field(env.car, mask, _window(start, duration), magnitude))
+    return t
+
+
+@register("dc_outage")
+def dc_outage(dc: int = 0, start: int = 8, duration: int = 6) -> Transform:
+    """Full outage of one DC for the window: avail → 0 (capacity, IT power
+    and idle draw all vanish; project_feasible sheds its load elsewhere)."""
+    def t(env: EnvParams) -> EnvParams:
+        row = _rows(env.avail.shape[0], (dc,))
+        off = np.outer(row, _window(start, duration))
+        return env._replace(avail=_clip01(env.avail * (1.0 - off)))
+    return t
+
+
+@register("demand_response")
+def demand_response(dc: int = 0, start: int = 16, duration: int = 4,
+                    curtail: float = 0.5) -> Transform:
+    """Demand-response event: the DC sheds ``curtail`` of its capacity."""
+    def t(env: EnvParams) -> EnvParams:
+        row = _rows(env.avail.shape[0], (dc,))
+        cut = 1.0 - curtail * np.outer(row, _window(start, duration))
+        return env._replace(avail=_clip01(env.avail * cut))
+    return t
+
+
+@register("carbon_spike")
+def carbon_spike(start: int = 6, duration: int = 6, magnitude: float = 2.5,
+                 dcs: Optional[Sequence[int]] = None) -> Transform:
+    """Grid carbon-intensity surge (e.g. coal peakers online) in the window."""
+    def t(env: EnvParams) -> EnvParams:
+        mask = _rows(env.carbon.shape[0], dcs)
+        return env._replace(
+            carbon=_scale_field(env.carbon, mask, _window(start, duration), magnitude))
+    return t
+
+
+@register("carbon_diurnal")
+def carbon_diurnal(amplitude: float = 0.35, trough_utc: int = 20) -> Transform:
+    """Marginal-carbon diurnal shape: intensity dips ``amplitude`` at
+    ``trough_utc`` (solar-heavy afternoon grid) and rises overnight."""
+    def t(env: EnvParams) -> EnvParams:
+        h = np.arange(24)
+        shape = 1.0 + amplitude * np.cos((h - trough_utc) / 24.0 * 2 * np.pi + np.pi)
+        carbon = np.asarray(env.carbon) * shape[None, :]
+        return env._replace(carbon=jnp.asarray(carbon, env.carbon.dtype))
+    return t
+
+
+@register("price_surge")
+def price_surge(start: int = 14, duration: int = 6, magnitude: float = 2.0,
+                dcs: Optional[Sequence[int]] = None) -> Transform:
+    """TOU price surge (grid scarcity / heat event) in the window."""
+    def t(env: EnvParams) -> EnvParams:
+        mask = _rows(env.eprice.shape[0], dcs)
+        return env._replace(
+            eprice=_scale_field(env.eprice, mask, _window(start, duration), magnitude))
+    return t
+
+
+@register("renewable_drought")
+def renewable_drought(scale: float = 0.15, start: int = 0, duration: int = 24,
+                      dcs: Optional[Sequence[int]] = None) -> Transform:
+    """Becalmed/overcast day: on-site renewables scaled to ``scale``."""
+    def t(env: EnvParams) -> EnvParams:
+        mask = _rows(env.rp.shape[0], dcs)
+        return env._replace(
+            rp=_scale_field(env.rp, mask, _window(start, duration), scale))
+    return t
+
+
+@register("traffic_pattern")
+def traffic_pattern(kind: str = "weekday", seed: int = 0,
+                    utilization: float = 0.45) -> Transform:
+    """Rebuild arrivals from a named workload pattern (weekday/weekend/
+    bursty/flat/sinusoidal) against the env's actual capacity — the one
+    source of truth is ``workload.base_rates`` / ``arrival_pattern``."""
+    def t(env: EnvParams) -> EnvParams:
+        cap = np.asarray(env.er).sum(axis=1)
+        base = workload.base_rates(cap, utilization)
+        car = workload.arrival_pattern(kind, base, seed=seed)
+        return env._replace(car=jnp.asarray(car, env.car.dtype))
+    return t
+
+
+@register("arrival_resample")
+def arrival_resample(seed: int = 0, std: float = 0.2) -> Transform:
+    """The paper's run-to-run variation: CAR ~ N(CAR, std·CAR), clipped."""
+    def t(env: EnvParams) -> EnvParams:
+        car = workload.resample_car(np.asarray(env.car), seed, std)
+        return env._replace(car=jnp.asarray(car, env.car.dtype))
+    return t

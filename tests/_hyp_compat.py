@@ -1,0 +1,63 @@
+"""Hypothesis compatibility layer.
+
+When hypothesis is installed (requirements-dev.txt) the real ``given`` /
+``strategies`` are re-exported and nothing changes. When it is absent the
+property tests still run: a tiny deterministic sampler draws a handful of
+seeded examples per test instead of hypothesis' shrinking search. Coverage
+is thinner but the invariants are still exercised, and collection never
+fails on the missing import.
+"""
+from __future__ import annotations
+
+try:
+    from hypothesis import given, settings, strategies as st  # noqa: F401
+    HAVE_HYPOTHESIS = True
+except ImportError:
+    HAVE_HYPOTHESIS = False
+    import random
+
+    _EXAMPLES = 5  # deterministic draws per test
+
+    def settings(*args, **kwargs):  # noqa: D103 - decorator-factory no-op
+        if args and callable(args[0]):  # bare @settings
+            return args[0]
+        return lambda fn: fn
+
+    class _Strategy:
+        def __init__(self, sample):
+            self.sample = sample  # callable(rng) -> value
+
+    class st:  # minimal strategies stand-in
+        @staticmethod
+        def integers(min_value, max_value):
+            return _Strategy(lambda rng: rng.randint(min_value, max_value))
+
+        @staticmethod
+        def floats(min_value, max_value):
+            return _Strategy(lambda rng: rng.uniform(min_value, max_value))
+
+        @staticmethod
+        def lists(elements, min_size=0, max_size=None):
+            def sample(rng):
+                n = rng.randint(min_size, max_size if max_size is not None else min_size + 4)
+                return [elements.sample(rng) for _ in range(n)]
+            return _Strategy(sample)
+
+        @staticmethod
+        def composite(fn):
+            def make(*args, **kwargs):
+                def sample(rng):
+                    return fn(lambda s: s.sample(rng), *args, **kwargs)
+                return _Strategy(sample)
+            return make
+
+    def given(*strategies):
+        def deco(fn):
+            def runner():
+                rng = random.Random(0xC0FFEE)
+                for _ in range(_EXAMPLES):
+                    fn(*[s.sample(rng) for s in strategies])
+            runner.__name__ = fn.__name__
+            runner.__doc__ = fn.__doc__
+            return runner
+        return deco

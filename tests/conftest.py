@@ -7,7 +7,13 @@ assert "xla_force_host_platform_device_count" not in os.environ.get("XLA_FLAGS",
 
 sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
 
-from hypothesis import settings
+# hypothesis is optional (see requirements-dev.txt); property tests fall back
+# to the deterministic sampler in tests/_hyp_compat.py when it is absent.
+try:
+    from hypothesis import settings
+except ImportError:
+    settings = None
 
-settings.register_profile("ci", max_examples=25, deadline=None)
-settings.load_profile("ci")
+if settings is not None:
+    settings.register_profile("ci", max_examples=25, deadline=None)
+    settings.load_profile("ci")

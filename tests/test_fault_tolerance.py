@@ -86,8 +86,8 @@ def test_elastic_restore_shape_agnostic(tmp_path):
     mgr = CheckpointManager(str(tmp_path))
     mgr.save(1, {"params": state.params})
     # restore with device_put to an explicit (trivial) sharding
-    mesh = jax.make_mesh((1, 1), ("data", "model"),
-                         axis_types=(jax.sharding.AxisType.Auto,) * 2)
+    from repro.launch.mesh import make_host_mesh
+    mesh = make_host_mesh()
     from repro.distributed.sharding import param_shardings
     sh = param_shardings(state.params, mesh)
     _, restored, _ = mgr.restore_latest(

@@ -3,7 +3,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
-from hypothesis import given, strategies as st
+from _hyp_compat import given, st
 
 from repro.optim.adamw import (AdamWConfig, _dequantize, _quantize, adamw_init,
                                adamw_update, global_norm)

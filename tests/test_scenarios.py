@@ -1,0 +1,192 @@
+"""Scenario engine + compiled day engine: registry round-trips, transform
+invariants (shapes/dtypes, purity, feasibility under outage/surge), and the
+scanned/batched day engines agreeing with the reference Python loop."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro import scenarios as S
+from repro.core import schedulers as SCH
+from repro.core.force_directed import FDConfig
+from repro.core.nash import NashConfig
+from repro.dcsim import env as E
+from repro.dcsim import workload
+
+ENV = E.build_env(4, seed=0)
+
+
+# ---------------------------------------------------------------------------
+# registry
+# ---------------------------------------------------------------------------
+
+def test_registry_has_the_advertised_transforms():
+    required = {"flash_crowd", "dc_outage", "carbon_spike", "price_surge",
+                "renewable_drought", "demand_response", "traffic_pattern",
+                "arrival_resample"}
+    assert required <= set(S.names())
+    assert len(S.names()) >= 7
+
+
+def test_registry_round_trips_by_name():
+    spec = S.Scenario("flash_crowd", {"start": 20, "duration": 2, "magnitude": 2.0})
+    direct = S.make(spec.name, **spec.params)(ENV)
+    via_spec = spec.apply(ENV)
+    for a, b in zip(jax.tree_util.tree_leaves(direct),
+                    jax.tree_util.tree_leaves(via_spec)):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+
+def test_registry_unknown_name_raises():
+    with pytest.raises(KeyError):
+        S.get("no-such-event")
+    with pytest.raises(KeyError):
+        S.build_suite("no-such-suite", ENV)
+
+
+def test_compose_applies_left_to_right():
+    double = S.make("flash_crowd", start=0, duration=24, magnitude=2.0)
+    halve = S.make("flash_crowd", start=0, duration=24, magnitude=0.5)
+    out = S.compose(double, halve)(ENV)
+    np.testing.assert_allclose(np.asarray(out.car), np.asarray(ENV.car), rtol=1e-6)
+
+
+# ---------------------------------------------------------------------------
+# transform invariants: every registered transform, default params
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("name", S.names())
+def test_transform_preserves_shapes_dtypes_and_is_pure(name):
+    t = S.make(name)
+    out1, out2 = t(ENV), t(ENV)
+    for a, b, c in zip(jax.tree_util.tree_leaves(ENV),
+                       jax.tree_util.tree_leaves(out1),
+                       jax.tree_util.tree_leaves(out2)):
+        assert a.shape == b.shape and a.dtype == b.dtype
+        np.testing.assert_array_equal(np.asarray(b), np.asarray(c))  # purity
+    assert bool(jnp.all(out1.avail >= 0)) and bool(jnp.all(out1.avail <= 1))
+    assert bool(jnp.all(out1.car >= 0))
+
+
+@pytest.mark.parametrize("scenario", [
+    S.Scenario("dc_outage", {"dc": 0, "start": 8, "duration": 6}),
+    S.Scenario("flash_crowd", {"start": 18, "duration": 4, "magnitude": 3.0}),
+    S.Scenario("demand_response", {"dc": 1, "start": 16, "duration": 4, "curtail": 0.6}),
+])
+def test_project_feasible_under_events(scenario):
+    """Eqs. (1)-(2) still hold after outage/surge: AR <= ER·avail, AR >= 0,
+    and the split sums to CAR whenever the fleet has headroom."""
+    env = scenario.apply(ENV)
+    for tau in (2, 10, 18):
+        ar = E.project_feasible(env, jnp.full((10, 4), 0.25), tau)
+        er_t = E.capacity_at(env, tau)
+        assert bool(jnp.all(ar <= er_t * (1 + 1e-5)))
+        assert bool(jnp.all(ar >= 0))
+        headroom = float(jnp.sum(er_t)) - float(jnp.sum(env.car[:, tau]))
+        if headroom > 0:
+            np.testing.assert_allclose(np.asarray(jnp.sum(ar, axis=1)),
+                                       np.asarray(env.car[:, tau]), rtol=2e-3)
+
+
+def test_capacity_fractions_respect_outage():
+    """The natural starting point puts no mass on an outaged DC."""
+    from repro.core.game import GameContext, capacity_fractions
+    env = S.make("dc_outage", dc=0, start=8, duration=6)(ENV)
+    f_out = capacity_fractions(GameContext(env=env, tau=jnp.int32(10)))
+    assert float(jnp.sum(f_out[:, 0])) == 0.0
+    np.testing.assert_allclose(np.asarray(jnp.sum(f_out, axis=1)), 1.0, rtol=1e-5)
+    f_on = capacity_fractions(GameContext(env=env, tau=jnp.int32(20)))
+    assert float(jnp.sum(f_on[:, 0])) > 0.0
+
+
+def test_run_day_rejects_unknown_engine():
+    with pytest.raises(ValueError):
+        SCH.run_day(ENV, "fd", engine="Scan")
+
+
+def test_outage_window_zeroes_the_dc():
+    env = S.make("dc_outage", dc=0, start=8, duration=6)(ENV)
+    for tau in range(8, 14):
+        ar = E.project_feasible(env, jnp.full((10, 4), 0.25), tau)
+        assert float(jnp.sum(ar[:, 0])) == 0.0
+        assert float(E.grid_power(env, ar, tau)[0]) <= 0.0  # only rp export
+    # outside the window the DC is back
+    ar = E.project_feasible(env, jnp.full((10, 4), 0.25), 20)
+    assert float(jnp.sum(ar[:, 0])) > 0.0
+
+
+def test_suites_materialize_with_consistent_shapes():
+    for suite in S.suite_names():
+        rows = S.build_suite(suite, ENV)
+        assert len(rows) >= 1
+        for _, env in rows:
+            assert env.car.shape == ENV.car.shape
+    assert len(S.build_suite("stress", ENV)) >= 8
+
+
+# ---------------------------------------------------------------------------
+# workload patterns (scenario traffic families)
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("kind", workload.PATTERNS)
+def test_arrival_patterns_shape_and_positive(kind):
+    base = workload.base_rates(np.asarray(ENV.er).sum(axis=1))
+    car = workload.arrival_pattern(kind, base, seed=3)
+    assert car.shape == (10, 24)
+    assert np.all(car > 0)
+
+
+def test_build_env_routes_through_base_rates():
+    """build_env's arrival construction == workload.base_rates + pattern."""
+    env = E.build_env(4, seed=5, pattern="weekday")
+    base = workload.base_rates(np.asarray(env.er).sum(axis=1))
+    expect = workload.arrival_pattern("weekday", base, seed=5)
+    np.testing.assert_allclose(np.asarray(env.car), expect, rtol=1e-6)
+
+
+# ---------------------------------------------------------------------------
+# compiled day engine vs. the reference loop
+# ---------------------------------------------------------------------------
+
+FD_CFG = FDConfig(iters=60)
+NASH_CFG = NashConfig(sweeps=3, inner_steps=20)
+
+
+@pytest.mark.parametrize("technique,cfg", [("fd", FD_CFG), ("nash", NASH_CFG)])
+def test_scan_engine_matches_loop(technique, cfg):
+    loop = SCH.run_day(ENV, technique, seed=0, hours=24, cfg_override=cfg,
+                       engine="loop")
+    scan = SCH.run_day(ENV, technique, seed=0, hours=24, cfg_override=cfg,
+                       engine="scan")
+    for k in ("carbon_kg", "cost_usd", "violation"):
+        a, b = loop["totals"][k], scan["totals"][k]
+        assert abs(a - b) <= 1e-5 * max(abs(a), 1.0), (k, a, b)
+    for lrow, srow in zip(loop["per_epoch"], scan["per_epoch"]):
+        for k in ("carbon_kg", "cost_usd"):
+            assert abs(lrow[k] - srow[k]) <= 1e-4 * max(abs(lrow[k]), 1.0)
+
+
+def test_batched_engine_matches_single_scan_across_suite():
+    suite = S.build_suite("stress", ENV)
+    envs = [env for _, env in suite]
+    assert len(envs) >= 8
+    batch = SCH.run_days_batched(envs, "fd", seeds=[0] * len(envs),
+                                 cfg_override=FD_CFG)
+    assert batch["totals"]["carbon_kg"].shape == (len(envs),)
+    assert batch["per_epoch"]["carbon_kg"].shape == (len(envs), 24)
+    # spot-check two scenario-days against the single-day scan engine
+    for idx in (0, 2):
+        single = SCH.run_day(envs[idx], "fd", seed=0, cfg_override=FD_CFG)
+        np.testing.assert_allclose(batch["totals"]["carbon_kg"][idx],
+                                   single["totals"]["carbon_kg"], rtol=1e-4)
+    assert np.all(np.isfinite(batch["totals"]["cost_usd"]))
+
+
+def test_scenarios_change_metrics_in_the_right_direction():
+    base = SCH.run_day(ENV, "fd", seed=0, cfg_override=FD_CFG)
+    spike = SCH.run_day(S.Scenario("carbon_spike", {"magnitude": 3.0}).apply(ENV),
+                        "fd", seed=0, cfg_override=FD_CFG)
+    surge = SCH.run_day(S.Scenario("price_surge", {"magnitude": 3.0}).apply(ENV),
+                        "fd", seed=0, cfg_override=FD_CFG)
+    assert spike["totals"]["carbon_kg"] > base["totals"]["carbon_kg"]
+    assert surge["totals"]["cost_usd"] > base["totals"]["cost_usd"]

@@ -2,7 +2,7 @@
 PY ?= python
 export PYTHONPATH := src$(if $(PYTHONPATH),:$(PYTHONPATH))
 
-.PHONY: check bench bench-quick bench-scenarios
+.PHONY: check bench bench-quick bench-scenarios bench-smoke
 
 check:
 	$(PY) -m pytest -x -q
@@ -15,3 +15,7 @@ bench-quick:
 
 bench-scenarios:
 	$(PY) -m benchmarks.run --only scenarios
+
+# perf-trajectory smoke: machine-readable engine timings, committed per perf PR
+bench-smoke:
+	REPRO_BENCH_QUICK=1 $(PY) -m benchmarks.run --only scenarios,engine --json BENCH_engine.json

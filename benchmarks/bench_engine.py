@@ -1,0 +1,90 @@
+"""Evaluation-pipeline throughput: the paper's ``compare_techniques``
+protocol (hour-loop reference vs one-compile batched engine), GT-DRL
+best-response round cost (full-width masked vmap vs gathered half dispatch),
+and month-scale episodes.
+
+Rows (name, us_per_call, derived):
+  engine/compare_loop_<t>     us per 5-env suite evaluation, loop reference
+  engine/compare_batched_<t>  us per 5-env suite evaluation; speedup derived
+  engine/gtdrl_round_masked   us per game round, full-width masked dispatch
+  engine/gtdrl_round_half     us per game round, I/2 gathered dispatch
+  engine/month_day_<t>        us per simulated day inside run_month
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro import scenarios as S
+from repro.core import gt_drl
+from repro.core import schedulers as SCH
+from repro.core.force_directed import FDConfig
+from repro.core.game import GameContext
+from repro.core.nash import NashConfig
+from repro.dcsim import env as E
+
+from .common import HOURS, QUICK, Timer, emit
+
+CFGS = {"fd": FDConfig(iters=60), "nash": NashConfig(sweeps=3, inner_steps=20)}
+
+# paper-default PPO inner loop (the FLOP-dominated regime the half dispatch
+# targets; tiny configs are overhead-bound and hide the win), few rounds
+GTDRL_BENCH = gt_drl.GTDRLConfig(rounds=2, pretrain_iters=2)
+
+
+def run(rows):
+    env = E.build_env(4, seed=0)
+    suite = S.build_suite("baseline", env)  # the paper's 5 resampled-arrival days
+    envs = [e for _, e in suite]
+    n = len(envs)
+    techniques = ("fd",) if QUICK else ("fd", "nash")
+
+    # -- compare_techniques: loop reference vs one-compile batched engine ----
+    for t in techniques:
+        kw = dict(objective="carbon", hours=HOURS, seed0=0,
+                  cfg_overrides={t: CFGS[t]})
+        SCH.compare_techniques(envs, (t,), engine="loop", **kw)   # warm jits
+        with Timer() as tm:
+            res_loop = SCH.compare_techniques(envs, (t,), engine="loop", **kw)
+        loop_s = tm.seconds
+        emit(rows, f"engine/compare_loop_{t}", loop_s,
+             f"envs={n};mean={res_loop[t]['mean']:.0f}")
+
+        SCH.compare_techniques(envs, (t,), engine="batched", **kw)  # warm
+        with Timer() as tm:
+            res_b = SCH.compare_techniques(envs, (t,), engine="batched", **kw)
+        emit(rows, f"engine/compare_batched_{t}", tm.seconds,
+             f"envs={n};speedup_vs_loop={loop_s / max(tm.seconds, 1e-9):.0f}x;"
+             f"mean={res_b[t]['mean']:.0f}")
+
+    # -- GT-DRL round cost: masked full-width vmap vs gathered half dispatch -
+    key = jax.random.PRNGKey(0)
+    ctx = GameContext(env=env, tau=jnp.int32(12), objective="carbon")
+    peak = jnp.zeros((E.num_dcs(env),))
+    round_times = {}
+    for impl in ("masked", "gather"):
+        cfg = dataclasses.replace(GTDRL_BENCH, half_update=impl)
+        agents = gt_drl.init_agents(key, env, cfg)
+        fn = jax.jit(functools.partial(gt_drl.solve_epoch, cfg=cfg))
+        jax.block_until_ready(fn(key, agents, ctx, peak))  # warm
+        with Timer() as tm:
+            jax.block_until_ready(fn(key, agents, ctx, peak))
+        round_times[impl] = tm.seconds / cfg.rounds
+    emit(rows, "engine/gtdrl_round_masked", round_times["masked"],
+         f"rounds={GTDRL_BENCH.rounds};players={E.num_players(env)}")
+    emit(rows, "engine/gtdrl_round_half", round_times["gather"],
+         f"speedup_vs_masked={round_times['masked'] / max(round_times['gather'], 1e-9):.1f}x")
+
+    # -- month-scale episodes: second-level scan threading the peak state ----
+    days = 3 if QUICK else 7
+    month = S.build_month(env, days=days, seed=0)
+    menvs = [e for _, e in month]
+    mkw = dict(objective="carbon", hours=HOURS, seed=0, cfg_override=CFGS["fd"])
+    SCH.run_month(menvs, "fd", **mkw)  # warm
+    with Timer() as tm:
+        res_m = SCH.run_month(menvs, "fd", **mkw)
+    emit(rows, "engine/month_day_fd", tm.seconds / days,
+         f"days={days};peak_final_kw={res_m['final_peak_w'].max() / 1e3:.0f}")

@@ -15,7 +15,6 @@ context features so the pretrained policy can condition on prices/carbon.
 from __future__ import annotations
 
 import dataclasses
-import functools
 from typing import Any, Dict, NamedTuple, Optional, Tuple
 
 import jax
@@ -24,7 +23,8 @@ import jax.numpy as jnp
 from ..dcsim import env as E
 from . import networks as nets
 from .game import GameContext, SolveResult, player_rewards, uniform_fractions
-from .ppo import AgentState, PPOConfig, agent_init, greedy_fractions, ppo_improve
+from .ppo import (AgentState, PPOConfig, agent_init, average_agents,
+                  greedy_fractions, ppo_improve)
 
 
 @dataclasses.dataclass(frozen=True)
@@ -35,18 +35,25 @@ class GTDRLConfig:
     polish_lr: float = 0.4
     damping: float = 0.5            # Jacobi damping: blend of new vs old joint
     state_mode: str = "strategy"    # strategy | env
-    pretrain_iters: int = 60
+    pretrain_iters: int = 60        # total (tau, joint) contexts seen offline
+    pretrain_batch: int = 4         # contexts trained in parallel per step
+    half_update: str = "gather"     # gather (I/2 dispatch) | masked (reference)
+
+
+def _norm(x: jnp.ndarray) -> jnp.ndarray:
+    """Max-normalize; safe when the whole vector is zero (e.g. a zero-carbon
+    grid or a renewable_drought scale=0 scenario) — returns zeros, not NaN."""
+    return x / jnp.maximum(jnp.max(jnp.abs(x)), 1e-9)
 
 
 def _ctx_features(env: E.EnvParams, tau, i) -> jnp.ndarray:
     """Per-DC context for state_mode='env' (beyond-paper)."""
-    dmax = E.dp_max_t(env, tau)
     feats = [
-        env.er[i] / jnp.max(env.er[i]),
-        dmax / (jnp.max(jnp.abs(dmax)) + 1e-9),
-        env.carbon[:, tau] / jnp.max(env.carbon[:, tau]),
-        env.eprice[:, tau] / jnp.max(env.eprice[:, tau]),
-        env.rp[:, tau] / (jnp.max(env.rp[:, tau]) + 1e-9),
+        _norm(env.er[i]),
+        _norm(E.dp_max_t(env, tau)),
+        _norm(env.carbon[:, tau]),
+        _norm(env.eprice[:, tau]),
+        _norm(env.rp[:, tau]),
     ]
     return jnp.concatenate(feats)
 
@@ -142,6 +149,65 @@ def _one_player_round(key, agent, env, tau, objective, peak_state, joint, i, mod
     return agent, row
 
 
+def _run_players(keys, agents, idx, env, tau, objective, peak_state, joint, cfg):
+    """vmap ``_one_player_round`` over the given player rows.
+
+    ``keys``/``agents`` carry a leading axis matching ``idx``; module-level
+    lookup of ``_one_player_round`` keeps the dispatch observable in tests.
+    """
+    def run(k, a, i):
+        return _one_player_round(
+            k, a, env=env, tau=tau, objective=objective, peak_state=peak_state,
+            joint=joint, i=i, mode=cfg.state_mode, ppo_cfg=cfg.ppo,
+            polish_steps=cfg.polish_steps, polish_lr=cfg.polish_lr)
+
+    return jax.vmap(run)(keys, agents, idx)
+
+
+def half_update(agents, joint, key_r, parity: int, ctx: GameContext,
+                peak_state, cfg: GTDRLConfig):
+    """Red-black Gauss-Seidel half-step: players with index%2==parity
+    best-respond simultaneously (vmapped); the other half hold — sequential
+    information flow at Jacobi's vmap efficiency.
+
+    ``cfg.half_update`` selects the implementation:
+
+    - ``"gather"`` (default): gather the active half's rows/agents, dispatch
+      ``_one_player_round`` for ceil(I/2) players only, scatter back — half
+      the per-round FLOPs of the full-width version.
+    - ``"masked"``: reference — dispatch all I players and discard the
+      inactive half's updates with a parity mask. Same results (the per-player
+      keys are identical), twice the work; kept for parity tests/benchmarks.
+
+    Both modes give each agent ceil(rounds) PPO updates per round. The
+    original implementation also trained the *inactive* half's agents each
+    half-step (two updates per round, against a stale joint, discarding only
+    their rows) — that extra compute is exactly what this restructure
+    removes, so gt-drl trajectories differ numerically from the seed commit.
+    """
+    env = ctx.env
+    i_n = E.num_players(env)
+    keys = jax.random.split(key_r, i_n)
+    if cfg.half_update == "gather":
+        idx = jnp.arange(parity, i_n, 2)
+        sub = jax.tree_util.tree_map(lambda x: x[idx], agents)
+        sub, rows = _run_players(keys[idx], sub, idx, env, ctx.tau,
+                                 ctx.objective, peak_state, joint, cfg)
+        agents = jax.tree_util.tree_map(
+            lambda full, new: full.at[idx].set(new), agents, sub)
+        return agents, joint.at[idx].set(rows)
+    if cfg.half_update != "masked":
+        raise ValueError(f"unknown half_update {cfg.half_update!r}")
+    new_agents, rows = _run_players(keys, agents, jnp.arange(i_n), env, ctx.tau,
+                                    ctx.objective, peak_state, joint, cfg)
+    active = jnp.arange(i_n) % 2 == parity
+    agents = jax.tree_util.tree_map(
+        lambda old, new: jnp.where(
+            active.reshape((i_n,) + (1,) * (new.ndim - 1)), new, old),
+        agents, new_agents)
+    return agents, jnp.where(active[:, None], rows, joint)
+
+
 def solve_epoch(
     key,
     agents: AgentState,
@@ -150,30 +216,14 @@ def solve_epoch(
     cfg: GTDRLConfig,
     init_fracs: Optional[jnp.ndarray] = None,
 ) -> Tuple[AgentState, SolveResult]:
-    """Run the game for one epoch: rounds × (all players PPO-best-respond)."""
-    env, tau, objective = ctx.env, ctx.tau, ctx.objective
-    i_n = E.num_players(env)
+    """Run the game for one epoch: rounds × (red half, black half)."""
     joint0 = init_fracs if init_fracs is not None else uniform_fractions(ctx)
-
-    def half_update(agents, joint, key_r, parity):
-        """Red-black Gauss-Seidel: players with index%2==parity best-respond
-        simultaneously (vmapped); the other half hold — sequential
-        information flow at Jacobi's vmap efficiency."""
-        keys = jax.random.split(key_r, i_n)
-        run = functools.partial(
-            _one_player_round, env=env, tau=tau, objective=objective,
-            peak_state=peak_state, joint=joint, mode=cfg.state_mode, ppo_cfg=cfg.ppo,
-            polish_steps=cfg.polish_steps, polish_lr=cfg.polish_lr)
-        agents, rows = jax.vmap(lambda k, a, i: run(k, a, i=i))(
-            keys, agents, jnp.arange(i_n))
-        mask = (jnp.arange(i_n) % 2 == parity)[:, None]
-        return agents, jnp.where(mask, rows, joint)
 
     def one_round(carry, key_r):
         agents, joint, best_joint, best_val = carry
         k1, k2 = jax.random.split(key_r)
-        agents, joint = half_update(agents, joint, k1, 0)
-        agents, joint = half_update(agents, joint, k2, 1)
+        agents, joint = half_update(agents, joint, k1, 0, ctx, peak_state, cfg)
+        agents, joint = half_update(agents, joint, k2, 1, ctx, peak_state, cfg)
         val = jnp.sum(player_rewards(ctx, joint, peak_state))
         better = val < best_val
         best_joint = jnp.where(better, joint, best_joint)
@@ -197,23 +247,34 @@ def pretrain(
     objective: str,
     cfg: GTDRLConfig,
 ) -> AgentState:
-    """Offline training over random (tau, arrival-scale, strategy) contexts."""
+    """Offline training over random (tau, arrival-scale, strategy) contexts.
+
+    Contexts are trained ``pretrain_batch`` at a time: each scan step vmaps
+    the all-player round over a batch of independently sampled (tau, joint)
+    contexts from the same starting agents, then averages the resulting
+    parameter/moment trees (parallel-SGD averaging). Total contexts seen is
+    ``>= pretrain_iters``; wall-clock shrinks by ~the batch factor since the
+    sequential scan is ``pretrain_iters / pretrain_batch`` steps long.
+    """
     i_n, d = E.num_players(env), E.num_dcs(env)
     agents = init_agents(key, env, cfg)
     peak0 = jnp.zeros((d,))
+    batch = max(1, cfg.pretrain_batch)
+    steps = -(-cfg.pretrain_iters // batch)  # ceil
 
-    def one(carry, key_t):
-        agents = carry
-        k1, k2, k3, k4 = jax.random.split(key_t, 4)
+    def one_ctx(agents, key_t):
+        k1, k2, k3 = jax.random.split(key_t, 3)
         tau = jax.random.randint(k1, (), 0, 24)
         joint = jax.random.dirichlet(k2, jnp.ones((i_n, d)))
         keys = jax.random.split(k3, i_n)
-        run = functools.partial(
-            _one_player_round, env=env, tau=tau, objective=objective,
-            peak_state=peak0, joint=joint, mode=cfg.state_mode, ppo_cfg=cfg.ppo,
-            polish_steps=cfg.polish_steps, polish_lr=cfg.polish_lr)
-        agents, _ = jax.vmap(lambda k, a, i: run(k, a, i=i))(keys, agents, jnp.arange(i_n))
-        return agents, None
+        agents, _ = _run_players(keys, agents, jnp.arange(i_n), env, tau,
+                                 objective, peak0, joint, cfg)
+        return agents
 
-    agents, _ = jax.lax.scan(one, agents, jax.random.split(key, cfg.pretrain_iters))
+    def one(agents, key_s):
+        agents_b = jax.vmap(one_ctx, in_axes=(None, 0))(
+            agents, jax.random.split(key_s, batch))
+        return average_agents(agents_b), None
+
+    agents, _ = jax.lax.scan(one, agents, jax.random.split(key, steps))
     return agents

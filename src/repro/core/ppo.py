@@ -161,3 +161,18 @@ def ppo_improve(
 def greedy_fractions(agent: AgentState, state: jnp.ndarray) -> jnp.ndarray:
     """Deterministic action: softmax of the policy mean."""
     return jax.nn.softmax(nets.actor_mean(agent.actor, state))
+
+
+def average_agents(agents_b: AgentState) -> AgentState:
+    """Collapse a leading batch axis by parameter averaging (parallel SGD).
+
+    Float leaves (params, AdamW moments) are averaged; integer leaves (the
+    optimizer step counters, identical across a batch of equal-length
+    updates) take the first copy so their dtype survives.
+    """
+    def avg(x):
+        if jnp.issubdtype(x.dtype, jnp.integer):
+            return x[0]
+        return jnp.mean(x, axis=0)
+
+    return jax.tree_util.tree_map(avg, agents_b)

@@ -1,22 +1,34 @@
-"""Unified scheduler registry + the compiled day-simulation engine.
+"""Unified scheduler registry + the compiled simulation engines.
 
 Every technique exposes ``solve_epoch(key, ctx, peak_state) -> SolveResult``;
-``run_day`` drives any of them through the paper's experimental protocol:
-24 one-hour epochs, monthly peak-demand state threaded through, metrics
-from the *detailed* simulator (not the optimization estimate).
+the engines drive any of them through the paper's experimental protocol:
+one-hour epochs, monthly peak-demand state threaded through, metrics from
+the *detailed* simulator (not the optimization estimate).
 
-Two engines share that protocol:
+Three engines share that protocol:
 
-- ``engine="scan"`` (default): the whole day is ONE jitted call — a
-  ``lax.scan`` over epochs with (rng key, peak state, solver state) in the
-  carry. Because the day is a single pure function of ``(env, key, peak0,
-  state0)``, it vmaps across environments: ``run_days_batched`` evaluates a
-  whole scenario suite × seeds fleet (``repro.scenarios``) in one compile.
-- ``engine="loop"``: the seed Python hour-loop, kept as the reference
-  implementation (and used automatically when a prebuilt stateful
-  ``solver`` closure is passed, as ``compare_techniques`` does for
-  deploy-once GT-DRL semantics). Both engines produce matching metrics for
+- ``engine="scan"`` (default): a day is ONE jitted call — a ``lax.scan``
+  over epochs with (rng key, peak state, solver state) in the carry. Because
+  the day is a single pure function of ``(env, key, peak0, state0)``, it
+  vmaps across environments: ``run_days_batched`` evaluates a whole scenario
+  suite × seeds fleet (``repro.scenarios``) in one compile, and
+  ``compare_techniques`` (the paper's protocol, every table in §6) drives it
+  once per technique. GT-DRL agents thread through the scan carry, so the
+  deploy-once protocol needs no stateful Python closure.
+- ``engine="month"`` (``run_month``): a second-level ``lax.scan`` over days
+  threads the monthly peak state — and the GT-DRL agents — across a whole
+  month of scanned days, making the peak-demand charge (eq. 6) a real
+  planning signal instead of a per-day afterthought.
+- ``engine="loop"``: the seed Python hour-loop, kept as the parity
+  reference (used automatically when a prebuilt stateful ``solver`` closure
+  is passed). Metrics accumulate on-device and transfer with a single
+  ``jax.device_get`` at day end. All engines produce matching metrics for
   the same technique/seed.
+
+Performance is tracked machine-readably: ``make bench-smoke`` runs
+``benchmarks.run --only scenarios,engine --json BENCH_engine.json`` so every
+perf PR appends loop-vs-scan-vs-batched day timings and GT-DRL round
+timings to a committed JSON trajectory (see ``benchmarks/bench_engine.py``).
 """
 from __future__ import annotations
 
@@ -41,21 +53,34 @@ _MODS = {"fd": (force_directed, force_directed.FDConfig()),
 
 _TOTAL_KEYS = ("carbon_kg", "cost_usd", "violation")
 
+stack_envs = E.stack_envs  # back-compat alias; the canonical home is dcsim.env
+
+
+@functools.lru_cache(maxsize=None)
+def _gtdrl_solve(cfg: gt_drl.GTDRLConfig) -> Callable:
+    """One jitted gt-drl epoch solver per config (shared across instances)."""
+    return jax.jit(
+        lambda key, agents, ctx, peak: gt_drl.solve_epoch(key, agents, ctx, peak, cfg))
+
 
 class GTDRLScheduler:
-    """Stateful wrapper: holds (pre)trained per-player agents across epochs."""
+    """Stateful wrapper: holds (pre)trained per-player agents across epochs.
+
+    ``agents`` injects an existing deployed snapshot (deploy-once protocol);
+    otherwise ``pretrain_key`` triggers offline pretraining, else fresh init.
+    """
 
     def __init__(self, env: E.EnvParams, objective: str, cfg: Optional[gt_drl.GTDRLConfig] = None,
-                 pretrain_key=None):
+                 pretrain_key=None, agents=None):
         self.cfg = cfg or gt_drl.GTDRLConfig()
         self.objective = objective
-        if pretrain_key is not None:
+        if agents is not None:
+            self.agents = agents
+        elif pretrain_key is not None:
             self.agents = gt_drl.pretrain(pretrain_key, env, objective, self.cfg)
         else:
             self.agents = gt_drl.init_agents(jax.random.PRNGKey(0), env, self.cfg)
-        self._solve = jax.jit(
-            lambda key, agents, ctx, peak: gt_drl.solve_epoch(key, agents, ctx, peak, self.cfg)
-        )
+        self._solve = _gtdrl_solve(self.cfg)
 
     def solve_epoch(self, key, ctx: GameContext, peak_state) -> SolveResult:
         self.agents, res = self._solve(key, self.agents, ctx, peak_state)
@@ -71,7 +96,8 @@ def get_scheduler(name: str, env: E.EnvParams, objective: str,
         cfg = overrides.get("cfg", default_cfg)
         return jax.jit(functools.partial(mod.solve_epoch, cfg=cfg))
     if name == "gt-drl":
-        sched = GTDRLScheduler(env, objective, overrides.get("cfg"), pretrain_key)
+        sched = GTDRLScheduler(env, objective, overrides.get("cfg"), pretrain_key,
+                               overrides.get("agents"))
         return sched.solve_epoch
     raise KeyError(f"unknown technique {name!r}; known: {TECHNIQUES}")
 
@@ -137,10 +163,37 @@ def _compiled_batch(technique: str, objective: str, hours: int, cfg) -> Callable
     return jax.jit(jax.vmap(core, in_axes=(0, 0, None, None)))
 
 
-def _day_inputs(env, technique, objective, seed, pretrain, cfg):
-    """Replicates the reference loop's key discipline + initial solver state."""
+@functools.lru_cache(maxsize=None)
+def _compiled_month(technique: str, objective: str, hours: int, cfg) -> Callable:
+    """month(env_days, keys, peak0, state0): scan the day core over days,
+    threading (peak, solver state) — the monthly-peak charge accumulates."""
+    day = _day_core(technique, objective, hours, cfg)
+
+    def month(env_days, keys, peak0, state0):
+        def body(carry, x):
+            peak, state = carry
+            env, key = x
+            peak, state, ms = day(env, key, peak, state)
+            return (peak, state), (ms, peak)
+
+        (peak, state), (ms, peaks) = jax.lax.scan(
+            body, (peak0, state0), (env_days, keys))
+        return peak, state, ms, peaks
+
+    return jax.jit(month)
+
+
+def _day_inputs(env, technique, objective, seed, pretrain, cfg,
+                solver_state0=None):
+    """Replicates the reference loop's key discipline + initial solver state.
+
+    An injected ``solver_state0`` short-circuits state construction (no
+    throwaway pretrain/init work) while keeping the key discipline intact.
+    """
     key = jax.random.PRNGKey(seed)
     kp, key = jax.random.split(key)
+    if solver_state0 is not None:
+        return key, solver_state0
     if technique == "gt-drl":
         c = cfg or gt_drl.GTDRLConfig()
         state0 = (gt_drl.pretrain(kp, env, objective, c) if pretrain
@@ -172,18 +225,19 @@ def run_day_scan(
     pretrain: bool = True,
     peak_state0: Optional[jnp.ndarray] = None,
     cfg_override: Any = None,
+    solver_state0: Any = None,
 ) -> Dict[str, Any]:
-    """One technique through a day as a single jitted lax.scan call."""
-    key, state0 = _day_inputs(env, technique, objective, seed, pretrain, cfg_override)
+    """One technique through a day as a single jitted lax.scan call.
+
+    ``solver_state0`` injects an initial solver state (deployed GT-DRL
+    agents), overriding the pretrain/init derived from ``seed``.
+    """
+    key, state0 = _day_inputs(env, technique, objective, seed, pretrain,
+                              cfg_override, solver_state0)
     peak0 = peak_state0 if peak_state0 is not None else jnp.zeros((E.num_dcs(env),))
     day = _compiled_day(technique, objective, hours, cfg_override)
     _, _, ms = day(env, key, peak0, state0)
     return _format_day(ms, hours, technique, objective)
-
-
-def stack_envs(envs: Sequence[E.EnvParams]) -> E.EnvParams:
-    """Stack same-shape envs leaf-wise into one batched EnvParams."""
-    return jax.tree_util.tree_map(lambda *xs: jnp.stack(xs), *envs)
 
 
 def run_days_batched(
@@ -195,13 +249,15 @@ def run_days_batched(
     hours: int = 24,
     pretrain: bool = True,
     cfg_override: Any = None,
+    solver_state0: Any = None,
 ) -> Dict[str, Any]:
     """Evaluate a fleet of scenario-days in ONE compiled vmapped call.
 
     ``envs``: a list of same-shape EnvParams (e.g. a materialized scenario
     suite) or an already-stacked batched EnvParams. ``seeds`` defaults to
     ``range(n)`` — one RNG stream per day, split exactly like ``run_day``.
-    GT-DRL pretrains once (deploy-once) and the agents are broadcast.
+    GT-DRL pretrains once (deploy-once) and the agents are broadcast;
+    ``solver_state0`` injects an already-deployed snapshot instead.
 
     Returns ``{"totals": {k: (n,)}, "per_epoch": {k: (n, hours)}}`` numpy
     arrays plus bookkeeping fields.
@@ -213,7 +269,7 @@ def run_days_batched(
         env0 = jax.tree_util.tree_map(lambda x: x[0], envs)
     else:
         envs = list(envs)
-        env_b, n = stack_envs(envs), len(envs)
+        env_b, n = E.stack_envs(envs), len(envs)
         env0 = envs[0]
     seeds = list(range(n)) if seeds is None else list(seeds)
     if len(seeds) != n:
@@ -223,7 +279,7 @@ def run_days_batched(
     # ONCE on the first seed's pretrain key (deploy-once semantics)
     keys = jnp.stack([jax.random.split(jax.random.PRNGKey(s))[1] for s in seeds])
     _, state0 = _day_inputs(env0, technique, objective, seeds[0], pretrain,
-                            cfg_override)
+                            cfg_override, solver_state0)
     peak0 = jnp.zeros((E.num_dcs(env0),))
 
     batch = _compiled_batch(technique, objective, hours, cfg_override)
@@ -232,6 +288,62 @@ def run_days_batched(
     totals = {k: out[k].sum(axis=1) for k in _TOTAL_KEYS}
     return {"totals": totals, "per_epoch": out, "technique": technique,
             "objective": objective, "seeds": seeds}
+
+
+def run_month(
+    envs,
+    technique: str,
+    objective: str = "carbon",
+    *,
+    days: Optional[int] = None,
+    seed: int = 0,
+    hours: int = 24,
+    pretrain: bool = True,
+    peak_state0: Optional[jnp.ndarray] = None,
+    cfg_override: Any = None,
+    solver_state0: Any = None,
+) -> Dict[str, Any]:
+    """Month-scale episode: a second-level lax.scan over days in ONE compile.
+
+    The monthly peak state (and, for gt-drl, the per-player agents) thread
+    across days, so the peak-demand charge is a real planning signal: an
+    assignment that sets a new monthly peak on day 3 pays for it all month.
+
+    ``envs``: one EnvParams (repeated for ``days`` days, default 30), a list
+    of per-day EnvParams or (name, EnvParams) rows (``scenarios.build_month``
+    output works directly), or an already-stacked (days, ...) EnvParams. Day
+    ``d`` uses the RNG stream of ``run_day(seed=seed + d)``, so day 0 with a
+    zero peak matches ``run_day`` exactly.
+
+    Returns per-day (days, hours) metric arrays, per-day totals, month
+    totals, and the end-of-day monthly peak trajectory ``peak_w`` (days, D).
+    """
+    if isinstance(envs, E.EnvParams) and envs.er.ndim == 2:
+        n = 30 if days is None else int(days)
+        env0, env_days = envs, E.tile_env(envs, n)
+    elif isinstance(envs, E.EnvParams):
+        n = int(envs.er.shape[0])
+        env0, env_days = jax.tree_util.tree_map(lambda x: x[0], envs), envs
+    else:
+        envs = [e if isinstance(e, E.EnvParams) else e[1] for e in envs]
+        n, env0, env_days = len(envs), envs[0], E.stack_envs(envs)
+    if days is not None and int(days) != n:
+        raise ValueError(f"days={days} but {n} per-day envs were given")
+
+    keys = jnp.stack(
+        [jax.random.split(jax.random.PRNGKey(seed + d))[1] for d in range(n)])
+    _, state0 = _day_inputs(env0, technique, objective, seed, pretrain,
+                            cfg_override, solver_state0)
+    peak0 = peak_state0 if peak_state0 is not None else jnp.zeros((E.num_dcs(env0),))
+
+    month = _compiled_month(technique, objective, hours, cfg_override)
+    final_peak, _, ms, peaks = month(env_days, keys, peak0, state0)
+    per_day = {k: np.asarray(v) for k, v in ms.items()}  # (n, hours) each
+    day_totals = {k: per_day[k].sum(axis=1) for k in _TOTAL_KEYS}
+    return {"per_day": per_day, "day_totals": day_totals,
+            "totals": {k: float(day_totals[k].sum()) for k in _TOTAL_KEYS},
+            "peak_w": np.asarray(peaks), "final_peak_w": np.asarray(final_peak),
+            "days": n, "technique": technique, "objective": objective}
 
 
 # ---------------------------------------------------------------------------
@@ -249,20 +361,22 @@ def run_day(
     peak_state0: Optional[jnp.ndarray] = None,
     cfg_override: Any = None,
     solver: Optional[Callable] = None,
+    solver_state0: Any = None,
     engine: str = "scan",
 ) -> Dict[str, Any]:
     """Run one technique through a day; returns per-epoch + total metrics.
 
     ``engine="scan"`` compiles the whole day into one call; ``"loop"`` is
     the reference Python hour-loop. A prebuilt ``solver`` closure forces the
-    loop engine (the closure may carry state across calls/runs).
+    loop engine (the closure may carry state across calls/runs);
+    ``solver_state0`` injects initial solver state into the scan engine.
     """
     if engine not in ("scan", "loop"):
         raise ValueError(f"unknown engine {engine!r}; known: scan, loop")
     if solver is None and engine == "scan":
         return run_day_scan(env, technique, objective, seed=seed, hours=hours,
                             pretrain=pretrain, peak_state0=peak_state0,
-                            cfg_override=cfg_override)
+                            cfg_override=cfg_override, solver_state0=solver_state0)
     key = jax.random.PRNGKey(seed)
     kp, key = jax.random.split(key)
     if solver is None:
@@ -273,14 +387,17 @@ def run_day(
         )
     d = E.num_dcs(env)
     peak = peak_state0 if peak_state0 is not None else jnp.zeros((d,))
-    per_epoch: List[Dict[str, float]] = []
-    totals = {k: 0.0 for k in _TOTAL_KEYS}
+    epoch_metrics: List[Dict[str, jnp.ndarray]] = []
     for tau in range(hours):
         key, ks = jax.random.split(key)
         ctx = GameContext(env=env, tau=jnp.int32(tau), objective=objective)
         res = solver(ks, ctx, peak)
         ar = fractions_to_ar(ctx, res.fractions)
         peak, m = E.step_epoch(env, peak, ar, jnp.int32(tau))
+        epoch_metrics.append(m)  # stays on device; no per-epoch host sync
+    per_epoch: List[Dict[str, float]] = []
+    totals = {k: 0.0 for k in _TOTAL_KEYS}
+    for tau, m in enumerate(jax.device_get(epoch_metrics)):  # ONE transfer
         row = {k: float(v) for k, v in m.items()}
         row["tau"] = tau
         per_epoch.append(row)
@@ -290,6 +407,18 @@ def run_day(
             "objective": objective}
 
 
+def _stats(vals, curves) -> Dict[str, Any]:
+    """mean ± stderr of daily totals + the mean per-epoch curve."""
+    vals = np.asarray(vals, dtype=float)
+    curves = np.asarray(curves, dtype=float)
+    n = vals.shape[0]
+    return {
+        "mean": float(vals.mean()),
+        "stderr": float(vals.std(ddof=1) / np.sqrt(n)) if n > 1 else 0.0,
+        "curve_mean": curves.mean(axis=0).tolist(),
+    }
+
+
 def compare_techniques(
     envs,
     techniques=TECHNIQUES,
@@ -297,28 +426,61 @@ def compare_techniques(
     *,
     hours: int = 24,
     seed0: int = 0,
+    engine: str = "batched",
+    cfg_overrides: Optional[Dict[str, Any]] = None,
 ) -> Dict[str, Dict[str, Any]]:
     """The paper's protocol: several runs (one env per resampled arrival
-    pattern), mean±stderr of daily totals. GT-DRL agents pretrain once on the
-    first env and are reused across runs (deploy-once semantics)."""
+    pattern), mean±stderr of daily totals.
+
+    ``engine="batched"`` (default) drives ``run_days_batched`` once per
+    technique — the whole env suite is one vmapped compile, with GT-DRL
+    agents pretrained once (deploy-once, on ``PRNGKey(seed0 + 999)``) and
+    broadcast through the scan carry. ``engine="loop"`` is the hour-loop
+    parity reference with identical deploy-once semantics: each day starts
+    from the same deployed agent snapshot, so both engines agree within
+    float32 tolerance. (The seed implementation instead shared one stateful
+    scheduler across days — agents kept adapting online, which cannot vmap;
+    per-day reset from the deployed snapshot is the protocol now, in both
+    engines.) ``cfg_overrides`` maps technique -> config.
+    """
     if isinstance(envs, E.EnvParams):
         envs = [envs]
-    out: Dict[str, Dict[str, Any]] = {}
+    envs = list(envs)
+    if engine not in ("batched", "loop"):
+        raise ValueError(f"unknown engine {engine!r}; known: batched, loop")
+    overrides = dict(cfg_overrides or {})
     metric = "carbon_kg" if objective == "carbon" else "cost_usd"
+    seeds = [seed0 + r for r in range(len(envs))]
+    out: Dict[str, Dict[str, Any]] = {}
+
+    def deployed_agents(cfg):
+        c = cfg or gt_drl.GTDRLConfig()
+        return gt_drl.pretrain(jax.random.PRNGKey(seed0 + 999), envs[0],
+                               objective, c)
+
+    if engine == "loop":
+        for t in techniques:
+            cfg = overrides.get(t)
+            agents0 = deployed_agents(cfg) if t == "gt-drl" else None
+            solver = None if t == "gt-drl" else get_scheduler(
+                t, envs[0], objective,
+                **({"cfg": cfg} if cfg is not None else {}))
+            vals, curves = [], []
+            for r, env in enumerate(envs):
+                s = (GTDRLScheduler(env, objective, cfg, agents=agents0).solve_epoch
+                     if t == "gt-drl" else solver)
+                res = run_day(env, t, objective, seed=seeds[r], hours=hours,
+                              solver=s, engine="loop")
+                vals.append(res["totals"][metric])
+                curves.append([e[metric] for e in res["per_epoch"]])
+            out[t] = _stats(vals, curves)
+        return out
+
+    env_b = E.stack_envs(envs)
     for t in techniques:
-        solver = get_scheduler(
-            t, envs[0], objective,
-            pretrain_key=jax.random.PRNGKey(seed0 + 999) if t == "gt-drl" else None)
-        vals = []
-        curves = []
-        for r, env in enumerate(envs):
-            res = run_day(env, t, objective, seed=seed0 + r, hours=hours, solver=solver)
-            vals.append(res["totals"][metric])
-            curves.append([e[metric] for e in res["per_epoch"]])
-        vals = np.asarray(vals)
-        out[t] = {
-            "mean": float(vals.mean()),
-            "stderr": float(vals.std(ddof=1) / np.sqrt(len(vals))) if len(envs) > 1 else 0.0,
-            "curve_mean": np.asarray(curves).mean(axis=0).tolist(),
-        }
+        cfg = overrides.get(t)
+        state0 = deployed_agents(cfg) if t == "gt-drl" else None
+        res = run_days_batched(env_b, t, objective, seeds=seeds, hours=hours,
+                               cfg_override=cfg, solver_state0=state0)
+        out[t] = _stats(res["totals"][metric], res["per_epoch"][metric])
     return out

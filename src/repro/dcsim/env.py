@@ -112,6 +112,22 @@ def build_env(
     )
 
 
+def stack_envs(envs) -> EnvParams:
+    """Stack same-shape envs leaf-wise into one batched EnvParams.
+
+    The leading axis is a scenario-day (or calendar-day) batch: vmap over it
+    for fleet evaluation (``schedulers.run_days_batched``) or scan over it
+    for month-scale episodes (``schedulers.run_month``).
+    """
+    return jax.tree_util.tree_map(lambda *xs: jnp.stack(xs), *list(envs))
+
+
+def tile_env(env: EnvParams, n: int) -> EnvParams:
+    """Broadcast one env to a leading axis of ``n`` identical days."""
+    return jax.tree_util.tree_map(
+        lambda x: jnp.broadcast_to(x, (n,) + x.shape), env)
+
+
 def num_players(env: EnvParams) -> int:
     return env.er.shape[0]
 

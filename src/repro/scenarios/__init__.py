@@ -7,9 +7,9 @@ batched day engine ``repro.core.schedulers.run_days_batched``).
 from . import transforms  # noqa: F401  (imports register the built-ins)
 from .registry import (Scenario, Transform, apply_all, compose, get, make,
                        names, register)
-from .suites import SUITES, build_suite, suite_names
+from .suites import SUITES, build_month, build_suite, suite_names
 
 __all__ = [
     "Scenario", "Transform", "apply_all", "compose", "get", "make", "names",
-    "register", "SUITES", "build_suite", "suite_names",
+    "register", "SUITES", "build_month", "build_suite", "suite_names",
 ]

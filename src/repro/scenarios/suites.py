@@ -61,3 +61,22 @@ def build_suite(name: str, base_env: EnvParams) -> List[Tuple[str, EnvParams]]:
     except KeyError:
         raise KeyError(f"unknown suite {name!r}; known: {suite_names()}") from None
     return [(day, apply_all(base_env, scenarios)) for day, scenarios in rows.items()]
+
+
+def build_month(base_env: EnvParams, days: int = 30, *,
+                seed: int = 0) -> List[Tuple[str, EnvParams]]:
+    """Per-day (name, env) rows for a month-scale episode.
+
+    A simple calendar: weekday traffic Mon–Fri, the weekend shape on days 5
+    and 6 of each week, and every day's arrivals independently resampled
+    (the paper's run-to-run 20%-std variation) so no two days are identical.
+    Feed the env column to ``schedulers.run_month``, which threads the
+    monthly peak-demand state across the stacked days.
+    """
+    rows = []
+    for d in range(days):
+        kind = "weekend" if d % 7 >= 5 else "weekday"
+        scens = [Scenario("traffic_pattern", {"kind": kind, "seed": seed}),
+                 Scenario("arrival_resample", {"seed": seed + 100 + d})]
+        rows.append((f"day{d:02d}-{kind}", apply_all(base_env, scens)))
+    return rows

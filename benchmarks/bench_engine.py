@@ -9,6 +9,9 @@ Rows (name, us_per_call, derived):
   engine/gtdrl_round_masked   us per game round, full-width masked dispatch
   engine/gtdrl_round_half     us per game round, I/2 gathered dispatch
   engine/month_day_<t>        us per simulated day inside run_month
+  engine/day_scan_fd_cost     us per compiled day, plain cost objective
+  engine/day_scan_fd_cost_sla us per compiled day with the latency/SLA terms
+                              (overhead vs plain cost derived)
 """
 from __future__ import annotations
 
@@ -88,3 +91,17 @@ def run(rows):
         res_m = SCH.run_month(menvs, "fd", **mkw)
     emit(rows, "engine/month_day_fd", tm.seconds / days,
          f"days={days};peak_final_kw={res_m['final_peak_w'].max() / 1e3:.0f}")
+
+    # -- SLA-enabled compiled day: the latency/SLA terms must stay cheap -----
+    sla_env = S.make("wan_degradation")(S.make("sla_tighten", tighten=0.8)(env))
+    day_s = {}
+    for obj in ("cost", "cost_sla"):
+        kw = dict(objective=obj, hours=HOURS, seed=0, cfg_override=CFGS["fd"])
+        SCH.run_day(sla_env, "fd", **kw)  # warm
+        with Timer() as tm:
+            res_d = SCH.run_day(sla_env, "fd", **kw)
+        day_s[obj] = tm.seconds
+        emit(rows, f"engine/day_scan_fd_{obj}", tm.seconds,
+             f"hours={HOURS};sla_usd={res_d['totals']['sla_miss_cost_usd']:.0f}"
+             + (f";overhead_vs_cost={day_s['cost_sla'] / max(day_s['cost'], 1e-9):.2f}x"
+                if obj == "cost_sla" else ""))

@@ -21,7 +21,7 @@ from repro.dcsim import env as E
 def main():
     ap = argparse.ArgumentParser()
     ap.add_argument("--technique", choices=TECHNIQUES, default="fd")
-    ap.add_argument("--objective", choices=("carbon", "cost"), default="carbon")
+    ap.add_argument("--objective", choices=E.OBJECTIVES, default="carbon")
     ap.add_argument("--dcs", type=int, default=4, choices=(4, 8, 16))
     ap.add_argument("--days", type=int, default=30)
     ap.add_argument("--seed", type=int, default=0)

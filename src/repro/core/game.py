@@ -30,7 +30,7 @@ class GameContext:
     """
     env: E.EnvParams
     tau: Any  # int or traced scalar
-    objective: str = "carbon"  # carbon | cost
+    objective: str = "carbon"  # carbon | cost | cost_sla (E.OBJECTIVES)
 
     def num_players(self) -> int:
         return E.num_players(self.env)

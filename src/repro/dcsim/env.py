@@ -6,26 +6,48 @@ scenario engine's ``run_days_batched`` fleet evaluation) and differentiable
 (the NASH best-reply baseline exploits the gradients).
 
 Shapes: I task types × D data centers × 24 UTC hours.
-Units: power W, energy cost $/h (prices $/kWh applied to W/1000),
-carbon kg/h, rates tasks/hour.
+
+Units (every cost metric is $ per one-hour epoch):
+
+====================  =========  =================================================
+field / quantity      shape      unit
+====================  =========  =================================================
+``er``, ``car``       (I, D)/…   tasks/h
+``it_idle``/``dyn``   (D,)       W
+``rp``                (D, 24)    W
+``eprice``            (D, 24)    $/kWh (applied to W/1000 → $/h)
+``peak_price``        (D,)       $/kW-month (applied to peak W/1000)
+``nprice``            scalar     $/GB (× ``sizes`` GB/task × AR tasks/h → $/h)
+``carbon``            (D, 24)    kg CO₂ / kWh (→ kg/h)
+``rtt``               (D, D)|(D,) ms round-trip between regions (row = source);
+                                 a (D,) vector is the mean access RTT directly
+``sla_ms``            (I,)       ms response-time target per task type
+``sla_price``         (I,)       $/task charged per expected SLA miss
+``sla_weight``        scalar     weight of the SLA term in ``cost_sla`` rewards
+latency               (I, D)     ms = access RTT + M/M/c-style queued service
+SLA miss cost         (I, D)     $/h = sla_price · AR · p_miss(latency, sla_ms)
+====================  =========  =================================================
 
 Beyond-paper extensions for the scenario engine (``repro.scenarios``):
 ``carbon`` carries an hourly axis (D, 24) so grid carbon-intensity events
 (spikes, diurnal marginal-carbon shapes) are expressible, and ``avail``
 (D, 24) masks per-DC capacity over the day (outages, demand-response
-curtailment). With ``avail == 1`` and a constant carbon profile the model
-reduces exactly to the paper's.
+curtailment). The SLA/latency subsystem (``dcsim.latency``) adds ``rtt``,
+``sla_ms``, ``sla_price`` and ``sla_weight``; with the defaults
+(``rtt = 0``, ``sla_price = 0``) every SLA term is exactly zero. With
+``avail == 1``, a constant carbon profile and the default SLA fields the
+model reduces exactly to the paper's.
 """
 from __future__ import annotations
 
 import dataclasses
-from typing import Any, Dict, NamedTuple, Tuple
+from typing import Any, Dict, NamedTuple, Optional, Tuple
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
-from . import colocation, power, renewables, topology, workload
+from . import colocation, latency, power, renewables, topology, workload
 from .topology import CRAC_MAX_W, CRAC_PER_DC, NETWORK_PRICE, NODES_PER_DC
 
 
@@ -45,6 +67,10 @@ class EnvParams(NamedTuple):
     nn_total: jnp.ndarray    # (D,) node count
     car: jnp.ndarray         # (I, 24) cloud arrival rates
     avail: jnp.ndarray       # (D, 24) capacity availability in [0, 1]
+    rtt: jnp.ndarray         # (D, D) inter-region RTT ms, or (D,) mean access RTT
+    sla_ms: jnp.ndarray      # (I,) response-time SLA target, ms
+    sla_price: jnp.ndarray   # (I,) $/task per expected SLA miss (0 = unpriced)
+    sla_weight: jnp.ndarray  # scalar weight of the SLA term under "cost_sla"
 
 
 # ---------------------------------------------------------------------------
@@ -109,6 +135,12 @@ def build_env(
         nprice=jnp.float32(NETWORK_PRICE), sizes=f(sizes),
         nn_total=f(nn.sum(axis=1).astype(float)), car=f(car),
         avail=jnp.ones((num_dcs, 24)),
+        # SLA/latency defaults: the paper's model (no WAN delay, misses
+        # unpriced). sla_ms is a finite slack target so sla_tighten scales it.
+        rtt=jnp.zeros((num_dcs, num_dcs)),
+        sla_ms=f(latency.default_sla_ms(er, nn.sum(axis=1))),
+        sla_price=jnp.zeros(len(sizes)),
+        sla_weight=jnp.float32(1.0),
     )
 
 
@@ -149,10 +181,16 @@ def capacity_at(env: EnvParams, tau) -> jnp.ndarray:
 # paper objective functions
 # ---------------------------------------------------------------------------
 
+def crac_cap_t(env: EnvParams, tau) -> jnp.ndarray:
+    """(D,) CRAC cooling-power ceiling at hour tau, scaled by ``avail``: a
+    curtailed/outaged DC has proportionally less cooling headroom too."""
+    return CRAC_PER_DC * CRAC_MAX_W * env.avail[:, tau]
+
+
 def dp_max_t(env: EnvParams, tau) -> jnp.ndarray:
     """DP_max[d] at hour tau (eq. 9)."""
     it = (env.it_idle + env.it_dyn) * env.avail[:, tau]
-    crac = jnp.minimum(it / power_cop(env), CRAC_PER_DC * CRAC_MAX_W)
+    crac = jnp.minimum(it / power_cop(env), crac_cap_t(env, tau))
     return (it + crac) * env.eff - env.rp[:, tau]
 
 
@@ -161,10 +199,29 @@ def power_cop(env: EnvParams) -> jnp.ndarray:
     return 0.0068 * t * t + 0.0008 * t + 0.458
 
 
-def dp_est(env: EnvParams, ar: jnp.ndarray, tau) -> jnp.ndarray:
-    """DP_est[i, d] (eq. 10): share of DP_max by rate fraction."""
+def load_share(env: EnvParams, ar: jnp.ndarray, tau) -> jnp.ndarray:
+    """(I, D) per-player share of each DC's load: frac_i / Σ_i frac_i.
+
+    Columns sum to 1 wherever the DC carries load and to 0 where it is idle
+    (an idle DC's residual idle/export power is unattributable to players —
+    the estimator assigns it to no one).
+    """
     frac = ar / jnp.maximum(capacity_at(env, tau), 1e-9)
-    return dp_max_t(env, tau)[None, :] * frac
+    rho = jnp.sum(frac, axis=0)
+    return frac / jnp.maximum(rho, 1e-9)[None, :]
+
+
+def dp_est(env: EnvParams, ar: jnp.ndarray, tau) -> jnp.ndarray:
+    """DP_est[i, d] (eq. 10, reconciled): each player's share of the
+    *detailed* DC power ``grid_power`` by load share, so
+    Σ_i DP_est[i, d] == DP[d] exactly on every loaded DC.
+
+    (The seed scaled DP_max by the raw rate fraction instead, which both
+    over-attributed idle power at low utilization and broke
+    estimator-vs-simulator agreement — eq. 18 could not match the detailed
+    ``step_epoch`` costs it estimates.)
+    """
+    return grid_power(env, ar, tau)[None, :] * load_share(env, ar, tau)
 
 
 def cet_est(env: EnvParams, ar: jnp.ndarray, tau) -> jnp.ndarray:
@@ -179,9 +236,14 @@ def ce_est(env: EnvParams, ar: jnp.ndarray, tau) -> jnp.ndarray:
 
 
 def nc_est(env: EnvParams, ar: jnp.ndarray) -> jnp.ndarray:
-    """NC_est[i, d] (eqs. 14–15)."""
-    ncmax = env.nprice * env.nn_total[None, :] * env.sizes[:, None]
-    return ncmax * ar / jnp.maximum(env.er, 1e-9)
+    """NC_est[i, d] (eqs. 14–15): NC_max · AR/ER with NC_max = nprice ·
+    sizes · ER (the $/h network bill at full execution rate), which reduces
+    to nprice · sizes · AR — identical to what ``step_epoch`` charges.
+
+    (The seed's NC_max was scaled by node counts instead of ER, mis-unitted
+    by node·h/task and inconsistent with the detailed simulator.)
+    """
+    return env.nprice * env.sizes[:, None] * ar
 
 
 def grid_power(env: EnvParams, ar: jnp.ndarray, tau) -> jnp.ndarray:
@@ -189,7 +251,7 @@ def grid_power(env: EnvParams, ar: jnp.ndarray, tau) -> jnp.ndarray:
     rho = jnp.sum(ar / jnp.maximum(capacity_at(env, tau), 1e-9), axis=0)  # (D,)
     a = env.avail[:, tau]
     it = (env.it_idle + env.it_dyn * jnp.clip(rho, 0.0, 1.0)) * a
-    crac = jnp.minimum(it / power_cop(env), CRAC_PER_DC * CRAC_MAX_W)
+    crac = jnp.minimum(it / power_cop(env), crac_cap_t(env, tau))
     return (it + crac) * env.eff - env.rp[:, tau]
 
 
@@ -202,12 +264,21 @@ def peak_increase(env: EnvParams, ar: jnp.ndarray, tau, peak_state: jnp.ndarray)
 
 
 def cct_est(env: EnvParams, ar: jnp.ndarray, tau, peak_state: jnp.ndarray) -> jnp.ndarray:
-    """CCT[i] (eqs. 16–17): estimated cloud operating cost per player, $/h."""
-    dpe = dp_est(env, ar, tau)  # (I, D) W
+    """CCT[i] (eqs. 16–17): estimated cloud operating cost per player, $/h.
+
+    Reconciled with the detailed simulator: energy is priced on the
+    load-share attribution of the actual DC power, and the monthly-peak
+    delta is split by the same shares. So Σ_i CCT == the ``step_epoch``
+    energy + peak + network costs whenever every DC carries load. (The seed
+    added the full fleet delta to *every* player — eq. 18 charged the
+    monthly peak I times while the simulator charged it once.)
+    """
+    share = load_share(env, ar, tau)
+    dpe = dp_est(env, ar, tau)
     a = jnp.where(dpe > 0, 1.0, env.alpha[None, :])
     energy = env.eprice[:, tau][None, :] * a * dpe / 1000.0
     delta, _ = peak_increase(env, ar, tau, peak_state)
-    dc = energy + delta[None, :] + nc_est(env, ar)
+    dc = energy + delta[None, :] * share + nc_est(env, ar)
     return jnp.sum(dc, axis=1)
 
 
@@ -216,11 +287,62 @@ def cc_est(env: EnvParams, ar: jnp.ndarray, tau, peak_state: jnp.ndarray) -> jnp
     return jnp.sum(cct_est(env, ar, tau, peak_state))
 
 
+# ---------------------------------------------------------------------------
+# SLA/latency model (dcsim.latency over EnvParams)
+# ---------------------------------------------------------------------------
+
+def latency_ms(env: EnvParams, ar: jnp.ndarray, tau) -> jnp.ndarray:
+    """(I, D) expected response time: mean access RTT + the M/M/c-style
+    queued service sojourn at the hour's utilization (``dcsim.latency``).
+
+    ``avail`` cancels out of the zero-load service share (nodes and rate
+    curtail together) and enters through rho against effective capacity.
+    """
+    rho = jnp.sum(ar / jnp.maximum(capacity_at(env, tau), 1e-9), axis=0)
+    return latency.expected_latency_ms(env.er, env.nn_total, rho, env.rtt)
+
+
+def sla_cost(env: EnvParams, ar: jnp.ndarray, tau,
+             lat_ms: Optional[jnp.ndarray] = None) -> jnp.ndarray:
+    """(I, D) expected SLA-miss cost, $/h: sla_price · AR · p_miss.
+
+    Exactly zero wherever ``sla_price`` is zero (the paper default).
+    ``lat_ms`` reuses an already-computed ``latency_ms`` (the eager loop
+    engine would otherwise evaluate the queueing model twice per epoch).
+    """
+    lat = latency_ms(env, ar, tau) if lat_ms is None else lat_ms
+    p = latency.sla_miss_prob(lat, env.sla_ms[:, None])
+    return env.sla_price[:, None] * ar * p
+
+
+def sla_cost_est(env: EnvParams, ar: jnp.ndarray, tau) -> jnp.ndarray:
+    """(I,) per-player SLA-miss cost — the latency term of ``cost_sla``.
+
+    Identical to the detailed simulator's charge by construction (both
+    price the same expected miss probability), so the estimator/simulator
+    consistency extends to the SLA term.
+    """
+    return jnp.sum(sla_cost(env, ar, tau), axis=1)
+
+
+OBJECTIVES = ("carbon", "cost", "cost_sla")
+
+
 def player_reward(env, ar, tau, peak_state, objective: str) -> jnp.ndarray:
-    """(I,) per-player objective value (lower is better)."""
+    """(I,) per-player objective value (lower is better).
+
+    ``carbon``: CET (eq. 12). ``cost``: CCT (eq. 17). ``cost_sla``: CCT plus
+    ``sla_weight`` × the expected SLA-miss cost — the beyond-paper objective
+    that prices computational performance into the game.
+    """
     if objective == "carbon":
         return cet_est(env, ar, tau)
-    return cct_est(env, ar, tau, peak_state)
+    if objective == "cost":
+        return cct_est(env, ar, tau, peak_state)
+    if objective == "cost_sla":
+        return (cct_est(env, ar, tau, peak_state)
+                + env.sla_weight * sla_cost_est(env, ar, tau))
+    raise ValueError(f"unknown objective {objective!r}; known: {OBJECTIVES}")
 
 
 # ---------------------------------------------------------------------------
@@ -266,14 +388,23 @@ def project_feasible(env: EnvParams, fractions: jnp.ndarray, tau) -> jnp.ndarray
 def step_epoch(
     env: EnvParams, peak_state: jnp.ndarray, ar: jnp.ndarray, tau
 ) -> Tuple[jnp.ndarray, Dict[str, jnp.ndarray]]:
-    """Simulate one epoch under assignment ``ar``; returns (new_peak, metrics)."""
+    """Simulate one epoch under assignment ``ar``; returns (new_peak, metrics).
+
+    ``latency_ms`` is the request-weighted mean response time over all
+    (task, DC) assignments; ``sla_miss_cost_usd`` rolls into ``cost_usd``
+    (it is exactly zero at the default ``sla_price = 0``).
+    """
     dp = grid_power(env, ar, tau)  # (D,) W, can be negative
     de = env.carbon[:, tau] * dp / 1000.0  # kg/h (negative = displaced grid carbon)
     a = jnp.where(dp > 0, 1.0, env.alpha)
     energy_cost = env.eprice[:, tau] * a * dp / 1000.0
     delta, new_peak = peak_increase(env, ar, tau, peak_state)
-    net_cost = jnp.sum(env.nprice * env.sizes[:, None] * ar, axis=0) / 1000.0
-    total_cost = energy_cost + delta + net_cost
+    # $/GB × GB/task × tasks/h is already $/h (the seed divided by 1000 and
+    # under-counted the detailed network bill 1000× vs the estimator)
+    net_cost = jnp.sum(env.nprice * env.sizes[:, None] * ar, axis=0)
+    lat = latency_ms(env, ar, tau)          # (I, D) ms
+    sla = jnp.sum(sla_cost(env, ar, tau, lat_ms=lat), axis=0)  # (D,) $/h
+    total_cost = energy_cost + delta + net_cost + sla
     viol = feasible_violation(env, ar, tau)
     rho = jnp.sum(ar / jnp.maximum(capacity_at(env, tau), 1e-9), axis=0)
     metrics = {
@@ -282,6 +413,8 @@ def step_epoch(
         "energy_cost_usd": jnp.sum(energy_cost),
         "peak_cost_usd": jnp.sum(delta),
         "network_cost_usd": jnp.sum(net_cost),
+        "sla_miss_cost_usd": jnp.sum(sla),
+        "latency_ms": jnp.sum(ar * lat) / jnp.maximum(jnp.sum(ar), 1e-9),
         "grid_power_w": jnp.sum(jnp.maximum(dp, 0.0)),
         "violation": viol,
         "max_rho": jnp.max(rho),

@@ -63,26 +63,28 @@ NUM_TASK_TYPES = len(TASK_TYPES)
 # ---------------------------------------------------------------------------
 # Locations: (city, state, tz offset h vs UTC, carbon factor kgCO2/kWh
 #             [EIA-shaped], TOU base $/kWh, peak demand $/kW, net metering α,
-#             solar capacity factor, wind capacity factor)
+#             solar capacity factor, wind capacity factor, lat °N, lon °E)
+# The trailing (lat, lon) pair feeds the inter-region RTT matrix of the
+# SLA/latency model (``dcsim.latency.rtt_matrix``).
 # ---------------------------------------------------------------------------
 
-LOCATIONS: Tuple[Tuple[str, str, int, float, float, float, float, float, float], ...] = (
-    ("new-york", "NY", -5, 0.23, 0.180, 18.0, 1.00, 0.35, 0.25),
-    ("san-francisco", "CA", -8, 0.21, 0.220, 20.0, 1.00, 0.65, 0.40),
-    ("chicago", "IL", -6, 0.43, 0.120, 14.0, 1.00, 0.40, 0.55),
-    ("dallas", "TX", -6, 0.41, 0.095, 11.0, 0.75, 0.60, 0.85),
-    ("seattle", "WA", -8, 0.09, 0.090, 10.0, 1.00, 0.30, 0.45),
-    ("miami", "FL", -5, 0.39, 0.110, 12.0, 0.50, 0.60, 0.20),
-    ("denver", "CO", -7, 0.55, 0.115, 13.0, 1.00, 0.70, 0.75),
-    ("boston", "MA", -5, 0.31, 0.210, 19.0, 1.00, 0.35, 0.35),
-    ("phoenix", "AZ", -7, 0.37, 0.105, 12.5, 0.70, 0.85, 0.30),
-    ("atlanta", "GA", -5, 0.40, 0.100, 11.5, 0.00, 0.50, 0.20),
-    ("portland", "OR", -8, 0.12, 0.095, 10.5, 1.00, 0.35, 0.50),
-    ("columbus", "OH", -5, 0.52, 0.115, 13.5, 1.00, 0.38, 0.40),
-    ("salt-lake-city", "UT", -7, 0.58, 0.098, 11.0, 0.85, 0.75, 0.55),
-    ("kansas-city", "MO", -6, 0.60, 0.100, 12.0, 1.00, 0.48, 0.70),
-    ("las-vegas", "NV", -8, 0.34, 0.102, 12.0, 0.90, 0.88, 0.35),
-    ("charlotte", "NC", -5, 0.33, 0.098, 11.0, 0.00, 0.52, 0.22),
+LOCATIONS: Tuple[Tuple[str, str, int, float, float, float, float, float, float, float, float], ...] = (
+    ("new-york", "NY", -5, 0.23, 0.180, 18.0, 1.00, 0.35, 0.25, 40.71, -74.01),
+    ("san-francisco", "CA", -8, 0.21, 0.220, 20.0, 1.00, 0.65, 0.40, 37.77, -122.42),
+    ("chicago", "IL", -6, 0.43, 0.120, 14.0, 1.00, 0.40, 0.55, 41.88, -87.63),
+    ("dallas", "TX", -6, 0.41, 0.095, 11.0, 0.75, 0.60, 0.85, 32.78, -96.80),
+    ("seattle", "WA", -8, 0.09, 0.090, 10.0, 1.00, 0.30, 0.45, 47.61, -122.33),
+    ("miami", "FL", -5, 0.39, 0.110, 12.0, 0.50, 0.60, 0.20, 25.76, -80.19),
+    ("denver", "CO", -7, 0.55, 0.115, 13.0, 1.00, 0.70, 0.75, 39.74, -104.99),
+    ("boston", "MA", -5, 0.31, 0.210, 19.0, 1.00, 0.35, 0.35, 42.36, -71.06),
+    ("phoenix", "AZ", -7, 0.37, 0.105, 12.5, 0.70, 0.85, 0.30, 33.45, -112.07),
+    ("atlanta", "GA", -5, 0.40, 0.100, 11.5, 0.00, 0.50, 0.20, 33.75, -84.39),
+    ("portland", "OR", -8, 0.12, 0.095, 10.5, 1.00, 0.35, 0.50, 45.52, -122.68),
+    ("columbus", "OH", -5, 0.52, 0.115, 13.5, 1.00, 0.38, 0.40, 39.96, -83.00),
+    ("salt-lake-city", "UT", -7, 0.58, 0.098, 11.0, 0.85, 0.75, 0.55, 40.76, -111.89),
+    ("kansas-city", "MO", -6, 0.60, 0.100, 12.0, 1.00, 0.48, 0.70, 39.10, -94.58),
+    ("las-vegas", "NV", -8, 0.34, 0.102, 12.0, 0.90, 0.88, 0.35, 36.17, -115.14),
+    ("charlotte", "NC", -5, 0.33, 0.098, 11.0, 0.00, 0.52, 0.22, 35.23, -80.84),
 )
 
 

@@ -26,6 +26,29 @@ SUITES: Dict[str, Dict[str, List[Scenario]]] = {
         "renewable-drought": [Scenario("renewable_drought", {"scale": 0.1})],
         "demand-response": [Scenario("demand_response", {"dc": 1, "start": 16, "duration": 4, "curtail": 0.6})],
     },
+    # the SLA/latency family: misses priced, WAN and capacity under stress
+    # (evaluate with objective="cost_sla" so schedulers see the new term)
+    "latency": {
+        "sla-baseline": [Scenario("sla_tighten")],
+        "sla-tight": [Scenario("sla_tighten", {"tighten": 0.6})],
+        "wan-degraded": [
+            Scenario("sla_tighten"),
+            Scenario("wan_degradation", {"factor": 3.0, "extra_ms": 30.0}),
+        ],
+        "sla-flash-crowd": [
+            Scenario("sla_tighten", {"tighten": 0.8}),
+            Scenario("flash_crowd", {"start": 18, "duration": 4, "magnitude": 3.0}),
+        ],
+        "sla-curtailed": [
+            Scenario("sla_tighten", {"tighten": 0.8}),
+            Scenario("demand_response", {"dc": 1, "start": 14, "duration": 6, "curtail": 0.6}),
+        ],
+        "sla-wan-crunch": [
+            Scenario("sla_tighten", {"tighten": 0.7}),
+            Scenario("wan_degradation", {"factor": 2.0, "extra_ms": 15.0}),
+            Scenario("flash_crowd", {"start": 17, "duration": 5, "magnitude": 2.0}),
+        ],
+    },
     # the full stress family: traffic, infrastructure and grid events
     "stress": {
         "baseline": [Scenario("identity")],

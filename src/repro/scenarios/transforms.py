@@ -13,6 +13,8 @@ heterogeneous regimes of Green-LLM, arXiv:2507.09942):
 - ``demand_response``    partial capacity curtailment in a window
 - ``traffic_pattern``    rebuild arrivals from a named workload pattern
 - ``arrival_resample``   the paper's per-run normal resampling of arrivals
+- ``sla_tighten``        enable/tighten SLA targets and price misses
+- ``wan_degradation``    inter-region RTT inflated (congestion/reroute event)
 - ``identity``           no-op (baseline rows in suites)
 
 Windows are ``[start, start+duration)`` in UTC hours, wrapping modulo 24.
@@ -26,7 +28,7 @@ from typing import Optional, Sequence
 import jax.numpy as jnp
 import numpy as np
 
-from ..dcsim import workload
+from ..dcsim import latency, workload
 from ..dcsim.env import EnvParams
 from .registry import Transform, register
 
@@ -152,6 +154,47 @@ def traffic_pattern(kind: str = "weekday", seed: int = 0,
         base = workload.base_rates(cap, utilization)
         car = workload.arrival_pattern(kind, base, seed=seed)
         return env._replace(car=jnp.asarray(car, env.car.dtype))
+    return t
+
+
+@register("sla_tighten")
+def sla_tighten(tighten: float = 1.0, price: float = 1e-4,
+                weight: Optional[float] = None,
+                tasks: Optional[Sequence[int]] = None) -> Transform:
+    """Turn the SLA term on: scale the selected tasks' SLA targets by
+    ``tighten`` (<1 = stricter) and charge ``price`` $/task per expected
+    miss. ``weight`` optionally overrides the ``cost_sla`` objective weight.
+    Defaults leave the targets at build_env's slack values, so this is also
+    the canonical "enable SLA pricing" switch for suites."""
+    def t(env: EnvParams) -> EnvParams:
+        mask = _rows(env.sla_ms.shape[0], tasks)
+        sla_ms = np.asarray(env.sla_ms) * (1.0 + (tighten - 1.0) * mask)
+        sla_price = np.where(mask > 0, price, np.asarray(env.sla_price))
+        out = env._replace(sla_ms=jnp.asarray(sla_ms, env.sla_ms.dtype),
+                           sla_price=jnp.asarray(sla_price, env.sla_price.dtype))
+        if weight is not None:
+            out = out._replace(
+                sla_weight=jnp.asarray(weight, env.sla_weight.dtype))
+        return out
+    return t
+
+
+@register("wan_degradation")
+def wan_degradation(factor: float = 3.0, extra_ms: float = 20.0) -> Transform:
+    """WAN congestion/reroute event: inter-region RTTs × ``factor`` plus
+    ``extra_ms`` of queueing delay on every off-diagonal (cross-region)
+    path. A zero (paper-default) RTT matrix is first seeded from the
+    canonical ``topology.LOCATIONS`` geometry, so the transform composes
+    onto default envs and onto already-degraded ones alike."""
+    def t(env: EnvParams) -> EnvParams:
+        rtt = np.asarray(env.rtt, dtype=float)
+        d = rtt.shape[-1]
+        if not rtt.any():
+            base = latency.rtt_matrix(num_dcs=d)
+            rtt = base.mean(axis=0) if rtt.ndim == 1 else base
+        cross = (1.0 - np.eye(d)) if rtt.ndim == 2 else (d - 1.0) / d
+        rtt = rtt * factor + extra_ms * cross
+        return env._replace(rtt=jnp.asarray(rtt, env.rtt.dtype))
     return t
 
 

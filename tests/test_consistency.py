@@ -1,0 +1,235 @@
+"""Estimator-vs-simulator cost reconciliation + the SLA/latency subsystem.
+
+The optimization estimator (eqs. 10–18, ``cct_est``/``cet_est``) and the
+detailed simulator (``step_epoch``) price the same physics: summed over
+players, the estimator's energy/peak/network(/SLA) components must equal
+the detailed metrics within float32 tolerance on any loaded assignment.
+The seed broke this three ways (network $ off 1000×, the monthly-peak
+delta charged I times, the CRAC cap blind to ``avail``); these tests pin
+the reconciled behavior, plus the latency model's invariants and the
+``cost_sla`` objective through both day engines.
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro import scenarios as S
+from repro.core import schedulers as SCH
+from repro.core.force_directed import FDConfig
+from repro.dcsim import env as E
+from repro.dcsim import latency as L
+
+ENV4 = E.build_env(4, seed=0)
+ENV8 = E.build_env(8, seed=1)
+FD_CFG = FDConfig(iters=60)
+
+SLA_ENV = S.make("wan_degradation")(
+    S.make("sla_tighten", tighten=0.6, price=1e-4)(ENV4))
+
+
+def _random_feasible_ar(env, seed, tau):
+    """Strictly positive random fractions -> every DC carries load."""
+    key = jax.random.PRNGKey(seed)
+    f = jax.random.uniform(key, env.er.shape, minval=0.05, maxval=1.0)
+    return E.project_feasible(env, f / f.sum(axis=1, keepdims=True), tau)
+
+
+# ---------------------------------------------------------------------------
+# estimator vs detailed simulator
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("env,tau,seed", [
+    (ENV4, 3, 0), (ENV4, 12, 1), (ENV4, 20, 2), (ENV8, 9, 3), (ENV8, 17, 4),
+])
+def test_cost_estimator_matches_detailed_simulator(env, tau, seed):
+    """Σ_i CCT (eq. 18) == step_epoch energy + peak + network costs."""
+    ar = _random_feasible_ar(env, seed, tau)
+    d = E.num_dcs(env)
+    peak = 0.3 * float(jnp.max(E.dp_max_t(env, tau))) * jnp.linspace(0.0, 1.0, d)
+    _, m = E.step_epoch(env, peak, ar, tau)
+    detailed = float(m["energy_cost_usd"] + m["peak_cost_usd"]
+                     + m["network_cost_usd"])
+    est = float(jnp.sum(E.cct_est(env, ar, tau, peak)))
+    np.testing.assert_allclose(est, detailed, rtol=1e-5)
+
+
+@pytest.mark.parametrize("env,tau", [(ENV4, 7), (ENV8, 15)])
+def test_carbon_estimator_matches_detailed_simulator(env, tau):
+    """Σ_i CET (eq. 13) == step_epoch carbon: the load-share attribution
+    reconciles the carbon estimate too."""
+    ar = _random_feasible_ar(env, 5, tau)
+    _, m = E.step_epoch(env, jnp.zeros((E.num_dcs(env),)), ar, tau)
+    np.testing.assert_allclose(float(E.ce_est(env, ar, tau)),
+                               float(m["carbon_kg"]), rtol=1e-5)
+
+
+def test_sla_estimator_matches_detailed_simulator():
+    """The SLA term reconciles the same way on an SLA-priced env."""
+    tau = 18
+    ar = _random_feasible_ar(SLA_ENV, 6, tau)
+    peak = jnp.zeros((4,))
+    _, m = E.step_epoch(SLA_ENV, peak, ar, tau)
+    assert float(m["sla_miss_cost_usd"]) > 0.0
+    np.testing.assert_allclose(float(jnp.sum(E.sla_cost_est(SLA_ENV, ar, tau))),
+                               float(m["sla_miss_cost_usd"]), rtol=1e-5)
+    est = float(jnp.sum(E.player_reward(SLA_ENV, ar, tau, peak, "cost_sla")))
+    detailed = float(m["energy_cost_usd"] + m["peak_cost_usd"]
+                     + m["network_cost_usd"] + m["sla_miss_cost_usd"])
+    np.testing.assert_allclose(est, detailed, rtol=1e-5)
+
+
+def test_network_cost_units():
+    """$/GB × GB/task × tasks/h — no spurious 1/1000 anywhere."""
+    tau = 10
+    ar = _random_feasible_ar(ENV4, 7, tau)
+    _, m = E.step_epoch(ENV4, jnp.zeros((4,)), ar, tau)
+    expect = float(jnp.sum(ENV4.nprice * ENV4.sizes[:, None] * ar))
+    np.testing.assert_allclose(float(m["network_cost_usd"]), expect, rtol=1e-6)
+    np.testing.assert_allclose(float(jnp.sum(E.nc_est(ENV4, ar))), expect,
+                               rtol=1e-6)
+
+
+def test_peak_delta_attributed_once_not_per_player():
+    """The monthly-peak delta is split across players by load share: summed
+    player deltas == the fleet delta (the seed charged it I times)."""
+    tau = 12
+    ar = _random_feasible_ar(ENV4, 8, tau)
+    peak = jnp.zeros((4,))
+    delta, _ = E.peak_increase(ENV4, ar, tau, peak)
+    with_peak = E.cct_est(ENV4, ar, tau, peak)
+    # a peak state above any draw -> zero delta; the difference is the charge
+    no_delta = E.cct_est(ENV4, ar, tau, peak + 1e9)
+    np.testing.assert_allclose(float(jnp.sum(with_peak - no_delta)),
+                               float(jnp.sum(delta)), rtol=1e-4)
+
+
+def test_crac_cap_scales_with_avail():
+    """A 50%-curtailed DC models 50% cooling headroom, not full (the cap
+    only binds on oversized IT loads, so build one)."""
+    env = ENV4._replace(it_dyn=ENV4.it_dyn * 8.0)
+    tau = 6
+    full = np.asarray(E.dp_max_t(env, tau))
+    it_full = np.asarray((env.it_idle + env.it_dyn))
+    assert np.any(it_full / np.asarray(E.power_cop(env))
+                  > np.asarray(E.crac_cap_t(env, tau))), "cap must bind"
+    half = env._replace(avail=env.avail * 0.5)
+    got = np.asarray(E.dp_max_t(half, tau))
+    it = it_full * 0.5
+    crac = np.minimum(it / np.asarray(E.power_cop(env)),
+                      np.asarray(E.crac_cap_t(half, tau)))
+    expect = (it + crac) * np.asarray(env.eff) - np.asarray(env.rp[:, tau])
+    np.testing.assert_allclose(got, expect, rtol=1e-6)
+    assert np.all(got < full)
+
+
+# ---------------------------------------------------------------------------
+# latency model invariants
+# ---------------------------------------------------------------------------
+
+def test_latency_monotone_in_utilization():
+    tau = 14
+    ar = _random_feasible_ar(SLA_ENV, 9, tau)
+    lat_full = E.latency_ms(SLA_ENV, ar, tau)
+    lat_half = E.latency_ms(SLA_ENV, ar * 0.5, tau)
+    lat_zero = E.latency_ms(SLA_ENV, jnp.zeros_like(ar), tau)
+    assert bool(jnp.all(lat_zero <= lat_half + 1e-9))
+    assert bool(jnp.all(lat_half <= lat_full + 1e-9))
+    assert bool(jnp.any(lat_half < lat_full))  # strictly on loaded DCs
+    # zero load == access RTT + pure service share
+    expect0 = (L.access_ms(SLA_ENV.rtt)[None, :]
+               + L.service_ms(SLA_ENV.er, SLA_ENV.nn_total))
+    np.testing.assert_allclose(np.asarray(lat_zero), np.asarray(expect0),
+                               rtol=1e-6)
+
+
+def test_sla_terms_zero_at_paper_defaults():
+    """Default env (rtt=0, sla_price=0): the SLA bill is exactly zero and
+    cost_usd decomposes exactly as energy + peak + network."""
+    tau = 16
+    ar = _random_feasible_ar(ENV4, 10, tau)
+    peak = jnp.zeros((4,))
+    _, m = E.step_epoch(ENV4, peak, ar, tau)
+    assert float(m["sla_miss_cost_usd"]) == 0.0
+    assert float(m["cost_usd"]) == float(m["energy_cost_usd"]
+                                         + m["peak_cost_usd"]
+                                         + m["network_cost_usd"])
+    r_cost = E.player_reward(ENV4, ar, tau, peak, "cost")
+    r_sla = E.player_reward(ENV4, ar, tau, peak, "cost_sla")
+    np.testing.assert_array_equal(np.asarray(r_cost), np.asarray(r_sla))
+
+
+def test_player_reward_rejects_unknown_objective():
+    ar = _random_feasible_ar(ENV4, 0, 0)
+    with pytest.raises(ValueError):
+        E.player_reward(ENV4, ar, 0, jnp.zeros((4,)), "latency")
+
+
+def test_rtt_matrix_geometry():
+    rtt = L.rtt_matrix(num_dcs=4)  # NY, SF, Dallas, Seattle
+    assert rtt.shape == (4, 4)
+    np.testing.assert_allclose(rtt, rtt.T)
+    assert np.all(np.diag(rtt) == 0.0)
+    off = rtt[~np.eye(4, dtype=bool)]
+    assert np.all(off > 0)
+    # coast-to-coast (NY-SF) must out-delay NY-Dallas
+    assert rtt[0, 1] > rtt[0, 2]
+    assert np.all(off < 300.0)  # continental US stays under 300 ms
+
+
+def test_wan_degradation_raises_latency_metric():
+    tau = 12
+    ar = _random_feasible_ar(ENV4, 11, tau)
+    base = S.make("sla_tighten")(ENV4)
+    degraded = S.make("wan_degradation", factor=3.0, extra_ms=30.0)(base)
+    _, m0 = E.step_epoch(base, jnp.zeros((4,)), ar, tau)
+    _, m1 = E.step_epoch(degraded, jnp.zeros((4,)), ar, tau)
+    assert float(m1["latency_ms"]) > float(m0["latency_ms"])
+
+
+def test_sla_tighten_scales_targets_and_prices():
+    env = S.make("sla_tighten", tighten=0.5, price=2e-4, weight=3.0,
+                 tasks=[0, 4])(ENV4)
+    sla = np.asarray(env.sla_ms)
+    np.testing.assert_allclose(sla[[0, 4]], np.asarray(ENV4.sla_ms)[[0, 4]] * 0.5)
+    np.testing.assert_allclose(sla[1], np.asarray(ENV4.sla_ms)[1])
+    price = np.asarray(env.sla_price)
+    assert price[0] == pytest.approx(2e-4) and price[1] == 0.0
+    assert float(env.sla_weight) == pytest.approx(3.0)
+
+
+# ---------------------------------------------------------------------------
+# cost_sla through the engines
+# ---------------------------------------------------------------------------
+
+def test_scan_matches_loop_with_cost_sla():
+    loop = SCH.run_day(SLA_ENV, "fd", "cost_sla", seed=0, hours=6,
+                       cfg_override=FD_CFG, engine="loop")
+    scan = SCH.run_day(SLA_ENV, "fd", "cost_sla", seed=0, hours=6,
+                       cfg_override=FD_CFG, engine="scan")
+    for k in ("carbon_kg", "cost_usd", "sla_miss_cost_usd", "violation"):
+        a, b = loop["totals"][k], scan["totals"][k]
+        assert abs(a - b) <= 1e-4 * max(abs(a), 1.0), (k, a, b)
+
+
+def test_latency_suite_batched_and_month_with_cost_sla():
+    """The latency suite runs in one vmapped compile; the SLA metrics flow
+    through run_days_batched and run_month unchanged."""
+    suite = S.build_suite("latency", ENV4)
+    envs = [e for _, e in suite]
+    res = SCH.run_days_batched(envs, "fd", "cost_sla", hours=4,
+                               cfg_override=FD_CFG)
+    n = len(envs)
+    assert res["totals"]["sla_miss_cost_usd"].shape == (n,)
+    assert res["per_epoch"]["latency_ms"].shape == (n, 4)
+    assert np.all(np.isfinite(res["totals"]["cost_usd"]))
+    assert np.all(res["totals"]["sla_miss_cost_usd"] > 0)
+    names = [nm for nm, _ in suite]
+    wan = res["per_epoch"]["latency_ms"][names.index("wan-degraded")].mean()
+    base = res["per_epoch"]["latency_ms"][names.index("sla-baseline")].mean()
+    assert wan > base
+
+    m = SCH.run_month(SLA_ENV, "fd", "cost_sla", days=2, hours=4,
+                      cfg_override=FD_CFG)
+    assert m["day_totals"]["sla_miss_cost_usd"].shape == (2,)
+    assert np.isfinite(m["totals"]["sla_miss_cost_usd"])

@@ -16,6 +16,8 @@ bench-quick:
 bench-scenarios:
 	$(PY) -m benchmarks.run --only scenarios
 
-# perf-trajectory smoke: machine-readable engine timings, committed per perf PR
+# perf-trajectory smoke: machine-readable engine timings, committed per perf
+# PR (includes engine/day_scan_routed — the (S, I, D) routing-tensor day —
+# so the per-source axis' overhead is tracked from PR 4 onward)
 bench-smoke:
 	REPRO_BENCH_QUICK=1 $(PY) -m benchmarks.run --only scenarios,engine --json BENCH_engine.json

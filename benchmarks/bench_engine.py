@@ -12,6 +12,9 @@ Rows (name, us_per_call, derived):
   engine/day_scan_fd_cost     us per compiled day, plain cost objective
   engine/day_scan_fd_cost_sla us per compiled day with the latency/SLA terms
                               (overhead vs plain cost derived)
+  engine/day_scan_routed      us per compiled day over the (S, I, D) routing
+                              tensor (overhead vs the unrouted SLA day
+                              derived — the cost of the per-source axis)
 """
 from __future__ import annotations
 
@@ -105,3 +108,15 @@ def run(rows):
              f"hours={HOURS};sla_usd={res_d['totals']['sla_miss_cost_usd']:.0f}"
              + (f";overhead_vs_cost={day_s['cost_sla'] / max(day_s['cost'], 1e-9):.2f}x"
                 if obj == "cost_sla" else ""))
+
+    # -- routed day: the (S, I, D) routing tensor's compile/runtime cost -----
+    route_env = S.make("origin_shift", toward=(0,), weight=0.8)(sla_env)
+    rkw = dict(objective="cost_sla", hours=HOURS, seed=0,
+               cfg_override=CFGS["fd"], routed=True)
+    SCH.run_day(route_env, "fd", **rkw)  # warm (includes the routed compile)
+    with Timer() as tm:
+        res_r = SCH.run_day(route_env, "fd", **rkw)
+    emit(rows, "engine/day_scan_routed", tm.seconds,
+         f"hours={HOURS};sources={E.num_sources(route_env)};"
+         f"sla_usd={res_r['totals']['sla_miss_cost_usd']:.0f};"
+         f"overhead_vs_unrouted={tm.seconds / max(day_s['cost_sla'], 1e-9):.2f}x")

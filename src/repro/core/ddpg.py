@@ -14,6 +14,7 @@ from typing import Any, Dict, NamedTuple, Tuple
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 
 from ..dcsim import env as E
 from ..optim.adamw import AdamWConfig, adamw_init, adamw_update
@@ -57,8 +58,7 @@ def _q(params, s, a):
 
 
 def ddpg_init(key, ctx: GameContext, cfg: DDPGConfig) -> DDPGState:
-    i_n, d = ctx.num_players(), ctx.num_dcs()
-    sdim = adim = i_n * d
+    sdim = adim = int(np.prod(ctx.joint_shape()))
     k1, k2 = jax.random.split(key)
     actor = nets.mlp_init(k1, (sdim, *cfg.hidden, adim))
     critic = _q_init(k2, sdim, adim, cfg.hidden)
@@ -72,14 +72,15 @@ def ddpg_init(key, ctx: GameContext, cfg: DDPGConfig) -> DDPGState:
     )
 
 
-def _fractions(logits_flat: jnp.ndarray, i_n: int, d: int) -> jnp.ndarray:
-    return jax.nn.softmax(logits_flat.reshape(i_n, d), axis=-1)
+def _fractions(logits_flat: jnp.ndarray, joint_shape) -> jnp.ndarray:
+    """Flat actor logits -> joint strategy ((I, D) or routed (S, I, D))."""
+    return jax.nn.softmax(logits_flat.reshape(joint_shape), axis=-1)
 
 
 def solve_epoch(key, ctx: GameContext, peak_state: jnp.ndarray,
                 cfg: DDPGConfig = DDPGConfig()) -> SolveResult:
-    i_n, d = ctx.num_players(), ctx.num_dcs()
-    sdim = adim = i_n * d
+    joint = ctx.joint_shape()
+    sdim = adim = int(np.prod(joint))
     state = ddpg_init(key, ctx, cfg)
     oc = AdamWConfig(lr=cfg.lr, weight_decay=0.0)
 
@@ -87,11 +88,11 @@ def solve_epoch(key, ctx: GameContext, peak_state: jnp.ndarray,
     scale = jnp.abs(cloud_objective(ctx, f0, peak_state)) + 1e-6
 
     def reward(logits_flat):
-        return -cloud_objective(ctx, _fractions(logits_flat, i_n, d), peak_state) / scale
+        return -cloud_objective(ctx, _fractions(logits_flat, joint), peak_state) / scale
 
     def env_step(s, a):
         r = reward(a)
-        s2 = _fractions(a, i_n, d).reshape(-1)
+        s2 = _fractions(a, joint).reshape(-1)
         return r, s2
 
     def td_update(st: DDPGState, batch_idx):
@@ -135,7 +136,7 @@ def solve_epoch(key, ctx: GameContext, peak_state: jnp.ndarray,
         hi = jnp.minimum(st.buf_n, cfg.buffer)
         batch_idx = jax.random.randint(k2, (cfg.batch,), 0, jnp.maximum(hi, 1))
         st = jax.lax.cond(st.buf_n >= cfg.warmup, lambda: td_update(st, batch_idx), lambda: st)
-        f = _fractions(a, i_n, d)
+        f = _fractions(a, joint)
         v = cloud_objective(ctx, f, peak_state)
         better = v < best_v
         best_f = jnp.where(better, f, best_f)

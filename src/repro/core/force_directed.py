@@ -32,16 +32,17 @@ def solve_epoch(key, ctx: GameContext, peak_state: jnp.ndarray,
 
     def it(carry, _):
         f, best_f, best_v = carry
-        # forces: marginal d(objective)/d(fraction) per cell
-        force = jax.grad(obj)(f)  # (I, D)
-        src = jnp.argmax(jnp.where(f > 1e-6, force, -jnp.inf), axis=1)  # (I,)
-        dst = jnp.argmin(force, axis=1)
-        move = cfg.quantum * jnp.take_along_axis(f, src[:, None], axis=1)[:, 0]
-        onehot_src = jax.nn.one_hot(src, f.shape[1])
-        onehot_dst = jax.nn.one_hot(dst, f.shape[1])
-        f = f - move[:, None] * onehot_src + move[:, None] * onehot_dst
+        # forces: marginal d(objective)/d(fraction) per cell; axis -1 is the
+        # DC simplex for both the (I, D) game and the routed (S, I, D) one
+        force = jax.grad(obj)(f)
+        src = jnp.argmax(jnp.where(f > 1e-6, force, -jnp.inf), axis=-1)
+        dst = jnp.argmin(force, axis=-1)
+        move = cfg.quantum * jnp.take_along_axis(f, src[..., None], axis=-1)[..., 0]
+        onehot_src = jax.nn.one_hot(src, f.shape[-1])
+        onehot_dst = jax.nn.one_hot(dst, f.shape[-1])
+        f = f - move[..., None] * onehot_src + move[..., None] * onehot_dst
         f = jnp.clip(f, 0.0, None)
-        f = f / jnp.sum(f, axis=1, keepdims=True)
+        f = f / jnp.sum(f, axis=-1, keepdims=True)
         v = obj(f)
         better = v < best_v
         best_f = jnp.where(better, f, best_f)

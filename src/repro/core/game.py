@@ -6,6 +6,14 @@ player i's reward is its own estimated carbon CET_i (eq. 12) or cost CCT_i
 (eq. 17) given everyone's strategies. The solution concept is Nash
 equilibrium (eqs. 19/20): no player can improve unilaterally.
 
+Routed games (``GameContext.routed``, beyond-paper): player i's strategy
+grows to an (S, D) matrix — one simplex row per source region — and the
+joint strategy is the (S, I, D) routing tensor, so the game decides *which
+region's* requests go to which DC and the ``cost_sla`` objective prices
+each (source, task) path at its own RTT. All machinery here is shape-
+polymorphic: the player axis is always ``axis=-2`` and DC simplex rows are
+``axis=-1``, so the same solver code drives both games.
+
 This module holds the shared machinery every solver uses: the strategy
 representation, the per-player objective closure, feasibility projection,
 and the Nash-residual diagnostic.
@@ -25,12 +33,15 @@ from ..dcsim import env as E
 class GameContext:
     """One epoch's decision problem.
 
-    Registered as a pytree (env + tau dynamic, objective static) so solvers
-    jit once per env *shape* and run all 24 epochs without recompiling.
+    Registered as a pytree (env + tau dynamic, objective/routed static) so
+    solvers jit once per env *shape* and run all 24 epochs without
+    recompiling. ``routed`` switches the joint-strategy shape from (I, D)
+    to the (S, I, D) routing tensor.
     """
     env: E.EnvParams
     tau: Any  # int or traced scalar
     objective: str = "carbon"  # carbon | cost | cost_sla (E.OBJECTIVES)
+    routed: bool = False
 
     def num_players(self) -> int:
         return E.num_players(self.env)
@@ -38,37 +49,66 @@ class GameContext:
     def num_dcs(self) -> int:
         return E.num_dcs(self.env)
 
+    def num_sources(self) -> int:
+        return E.num_sources(self.env)
+
+    def is_routed(self) -> bool:
+        """Whether the joint strategy actually carries a source axis.
+
+        The degenerate S = 1 aggregate origin has nothing to route — one
+        source owns all demand — so the routed game *is* the unrouted one
+        and runs the identical program (this is what makes the S = 1 parity
+        guarantee bit-for-bit: XLA fuses (1, D) and (D,) loop bodies
+        differently, so shape-polymorphic code alone drifts in the last
+        ulps over compiled solver iterations).
+        """
+        return self.routed and self.num_sources() > 1
+
+    def joint_shape(self) -> Tuple[int, ...]:
+        """Shape of the joint strategy: (S, I, D) routed, (I, D) otherwise.
+
+        One player's strategy is this shape minus the player axis (-2);
+        ``gt_drl._row_shape`` is the per-agent version of the same rule.
+        """
+        i, d = self.num_players(), self.num_dcs()
+        return (self.num_sources(), i, d) if self.is_routed() else (i, d)
+
 
 def _ctx_flatten(ctx: GameContext):
-    return (ctx.env, ctx.tau), ctx.objective
+    return (ctx.env, ctx.tau), (ctx.objective, ctx.routed)
 
 
-def _ctx_unflatten(objective, children):
+def _ctx_unflatten(aux, children):
     env, tau = children
-    return GameContext(env=env, tau=tau, objective=objective)
+    objective, routed = aux
+    return GameContext(env=env, tau=tau, objective=objective, routed=routed)
 
 
 jax.tree_util.register_pytree_node(GameContext, _ctx_flatten, _ctx_unflatten)
 
 
 def fractions_to_ar(ctx: GameContext, fractions: jnp.ndarray) -> jnp.ndarray:
-    """(I, D) simplex rows -> feasible AR (eqs. 1, 2, 21)."""
+    """Simplex rows -> feasible AR (eqs. 1, 2, 21): (I, D) -> (I, D), or the
+    routed (S, I, D) tensor -> per-path AR3 (S, I, D)."""
+    if ctx.is_routed():
+        return E.project_feasible_routed(ctx.env, fractions, ctx.tau)
     return E.project_feasible(ctx.env, fractions, ctx.tau)
 
 
 def uniform_fractions(ctx: GameContext) -> jnp.ndarray:
-    i, d = ctx.num_players(), ctx.num_dcs()
-    return jnp.full((i, d), 1.0 / d)
+    return jnp.full(ctx.joint_shape(), 1.0 / ctx.num_dcs())
 
 
 def capacity_fractions(ctx: GameContext) -> jnp.ndarray:
     """Effective-ER-proportional start (a natural feasible point).
 
     Uses the hour's ER·avail so scenario outage/curtailment windows get no
-    initial mass; reduces to ER-proportional when avail ≡ 1.
+    initial mass; reduces to ER-proportional when avail ≡ 1. Routed games
+    broadcast the same source-blind split to every source region.
     """
     er_t = E.capacity_at(ctx.env, ctx.tau)
-    return er_t / jnp.maximum(jnp.sum(er_t, axis=1, keepdims=True), 1e-9)
+    f = er_t / jnp.maximum(jnp.sum(er_t, axis=1, keepdims=True), 1e-9)
+    return jnp.broadcast_to(f, ctx.joint_shape()) if ctx.is_routed() else f
 
 
 def player_rewards(
@@ -86,8 +126,13 @@ def cloud_objective(
     return jnp.sum(player_rewards(ctx, fractions, peak_state))
 
 
+def player_row(fractions: jnp.ndarray, i) -> jnp.ndarray:
+    """Player i's strategy: (D,) from (I, D), or (S, D) from (S, I, D)."""
+    return fractions[..., i, :]
+
+
 def replace_player(fractions: jnp.ndarray, i, row: jnp.ndarray) -> jnp.ndarray:
-    return fractions.at[i].set(row)
+    return fractions.at[..., i, :].set(row)
 
 
 def player_objective(
@@ -108,15 +153,16 @@ def nash_residual(
 ) -> jnp.ndarray:
     """How far from Nash: max relative unilateral improvement any player can
     find with a short projected-gradient probe. 0 at (local) equilibrium."""
-    i_n = fractions.shape[0]
+    i_n = fractions.shape[-2]
 
     def probe(i):
         base = player_rewards(ctx, fractions, peak_state)[i]
 
         def obj(logits):
-            return player_objective(ctx, fractions, i, jax.nn.softmax(logits), peak_state)
+            return player_objective(ctx, fractions, i,
+                                    jax.nn.softmax(logits, axis=-1), peak_state)
 
-        logits0 = jnp.log(fractions[i] + 1e-9)
+        logits0 = jnp.log(player_row(fractions, i) + 1e-9)
 
         def step(logits, _):
             g = jax.grad(obj)(logits)
@@ -134,7 +180,7 @@ def nash_residual(
 # ---------------------------------------------------------------------------
 
 class SolveResult(NamedTuple):
-    fractions: jnp.ndarray       # (I, D)
+    fractions: jnp.ndarray       # (I, D), or (S, I, D) for routed games
     info: Dict[str, jnp.ndarray]
 
 

@@ -26,14 +26,15 @@ class GAConfig:
 
 def solve_epoch(key, ctx: GameContext, peak_state: jnp.ndarray,
                 cfg: GAConfig = GAConfig()) -> SolveResult:
-    i_n, d = ctx.num_players(), ctx.num_dcs()
+    i_n = ctx.num_players()
+    joint = ctx.joint_shape()  # (I, D), or (S, I, D) for routed games
 
     def obj(f):
         return cloud_objective(ctx, f, peak_state)
 
     k0, key = jax.random.split(key)
     f0 = uniform_fractions(ctx)
-    pop = jax.random.dirichlet(k0, jnp.ones((cfg.population, i_n, d)))
+    pop = jax.random.dirichlet(k0, jnp.ones((cfg.population,) + joint))
     pop = pop.at[0].set(f0)  # seed with the neutral uniform split
     fit = jax.vmap(obj)(pop)
 
@@ -47,14 +48,16 @@ def solve_epoch(key, ctx: GameContext, peak_state: jnp.ndarray,
         p_sel = p_sel / jnp.sum(p_sel)
         pa = jax.random.choice(k1, cfg.population, p=p_sel)
         pb = jax.random.choice(k2, cfg.population, p=p_sel)
-        # row-wise arithmetic crossover
+        # player-wise arithmetic crossover ((I, 1) broadcasts over the source
+        # axis of a routed (S, I, D) joint: a player's whole routing matrix
+        # crosses over as one gene)
         mix = jax.random.uniform(k3, (i_n, 1))
         child = mix * pop[pa] + (1 - mix) * pop[pb]
-        # Dirichlet mutation on a random subset of rows
+        # Dirichlet mutation on a random subset of players
         mut = jax.random.dirichlet(k4, child * cfg.mutate_conc + 0.3)
         do_mut = jax.random.uniform(jax.random.fold_in(k4, 1), (i_n, 1)) < cfg.mutate_prob
         child = jnp.where(do_mut, mut, child)
-        child = child / jnp.sum(child, axis=1, keepdims=True)
+        child = child / jnp.sum(child, axis=-1, keepdims=True)
         cv = obj(child)
         # replace worst
         worst = jnp.argmax(fit)

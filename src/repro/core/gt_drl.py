@@ -11,6 +11,11 @@ decomposition shrinks each agent's state/action space from |I|·|D| to |D|
 State faithful to the paper: the player's own strategy (its fractions).
 ``state_mode="env"`` (beyond-paper, flag-gated) appends normalized per-DC
 context features so the pretrained policy can condition on prices/carbon.
+
+Routed games (``GameContext.routed``) grow each player's strategy from a
+(D,) simplex row to an (S, D) routing matrix — the decomposition argument
+carries over: |S|·|D| per agent instead of |S|·|I|·|D| joint — and
+``state_mode="env"`` gains the player's origin-weighted access RTT feature.
 """
 from __future__ import annotations
 
@@ -19,6 +24,7 @@ from typing import Any, Dict, NamedTuple, Optional, Tuple
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 
 from ..dcsim import env as E
 from . import networks as nets
@@ -46,8 +52,12 @@ def _norm(x: jnp.ndarray) -> jnp.ndarray:
     return x / jnp.maximum(jnp.max(jnp.abs(x)), 1e-9)
 
 
-def _ctx_features(env: E.EnvParams, tau, i) -> jnp.ndarray:
-    """Per-DC context for state_mode='env' (beyond-paper)."""
+def _ctx_features(env: E.EnvParams, tau, i, routed: bool = False) -> jnp.ndarray:
+    """Per-DC context for state_mode='env' (beyond-paper).
+
+    Routed games append the player's origin-weighted access RTT per DC —
+    the locality signal the (S, D) routing strategy is meant to exploit.
+    """
     feats = [
         _norm(env.er[i]),
         _norm(E.dp_max_t(env, tau)),
@@ -55,38 +65,69 @@ def _ctx_features(env: E.EnvParams, tau, i) -> jnp.ndarray:
         _norm(env.eprice[:, tau]),
         _norm(env.rp[:, tau]),
     ]
+    if routed:
+        w = E.origin_at(env, tau)[:, i]                       # (S,)
+        feats.append(_norm(jnp.sum(w[:, None] * E.source_rtt(env), axis=0)))
     return jnp.concatenate(feats)
 
 
-def state_dim(env: E.EnvParams, mode: str) -> int:
+def _row_shape(env: E.EnvParams, routed: bool):
+    """One player's strategy shape: (D,), or (S, D) in a routed game.
+
+    The degenerate S = 1 origin is normalized to the unrouted (D,) shape —
+    one source has nothing to route, and running the identical program is
+    what keeps the S = 1 parity guarantee bit-for-bit (see
+    ``GameContext.is_routed``).
+    """
     d = E.num_dcs(env)
-    return d if mode == "strategy" else d + 5 * d
+    s = E.num_sources(env)
+    return (s, d) if (routed and s > 1) else (d,)
 
 
-def _state_of(env, tau, i, mode):
+def state_dim(env: E.EnvParams, mode: str, routed: bool = False) -> int:
+    d = E.num_dcs(env)
+    shape = _row_shape(env, routed)
+    own = int(np.prod(shape))
+    if mode == "strategy":
+        return own
+    return own + (6 if len(shape) == 2 else 5) * d
+
+
+def _state_of(env, tau, i, mode, routed):
+    shape = _row_shape(env, routed)
+
     def fn(logits):
-        frac = jax.nn.softmax(logits)
+        frac = jax.nn.softmax(logits.reshape(shape), axis=-1).reshape(-1)
         if mode == "strategy":
             return frac
-        return jnp.concatenate([frac, _ctx_features(env, tau, i)])
+        return jnp.concatenate([frac, _ctx_features(env, tau, i, routed)])
     return fn
 
 
-def init_agents(key, env: E.EnvParams, cfg: GTDRLConfig) -> AgentState:
-    """Stacked per-player agents: leading axis |I| on every leaf."""
-    i_n, d = E.num_players(env), E.num_dcs(env)
-    sd = state_dim(env, cfg.state_mode)
+def init_agents(key, env: E.EnvParams, cfg: GTDRLConfig,
+                routed: bool = False) -> AgentState:
+    """Stacked per-player agents: leading axis |I| on every leaf.
+
+    In a routed game each agent's action space is the flattened (S, D)
+    routing matrix instead of a single (D,) simplex row.
+    """
+    i_n = E.num_players(env)
+    sd = state_dim(env, cfg.state_mode, routed)
+    ad = int(np.prod(_row_shape(env, routed)))
     keys = jax.random.split(key, i_n)
-    return jax.vmap(lambda k: agent_init(k, sd, d, cfg.ppo))(keys)
+    return jax.vmap(lambda k: agent_init(k, sd, ad, cfg.ppo))(keys)
 
 
 def _player_reward_closure(env, tau, objective, peak_state, joint_fracs, i, scale):
     """reward(logits) = -objective_i(joint with row i replaced) / scale."""
+    routed = joint_fracs.ndim == 3
+    shape = _row_shape(env, routed)
 
     def fn(logits):
-        row = jax.nn.softmax(logits)
-        fr = joint_fracs.at[i].set(row)
-        ar = E.project_feasible(env, fr, tau)
+        row = jax.nn.softmax(logits.reshape(shape), axis=-1)
+        fr = joint_fracs.at[..., i, :].set(row)
+        ar = (E.project_feasible_routed(env, fr, tau) if routed
+              else E.project_feasible(env, fr, tau))
         r = E.player_reward(env, ar, tau, peak_state, objective)[i]
         return -r / scale
 
@@ -95,19 +136,30 @@ def _player_reward_closure(env, tau, objective, peak_state, joint_fracs, i, scal
 
 def _one_player_round(key, agent, env, tau, objective, peak_state, joint, i, mode, ppo_cfg,
                       polish_steps=30, polish_lr=0.4):
-    """PPO-improve player i against fixed others; return (agent, greedy row)."""
+    """PPO-improve player i against fixed others; return (agent, greedy row).
+
+    The player's strategy row is (D,) — or its (S, D) routing matrix in a
+    routed game (``joint`` is then the (S, I, D) tensor); the agent always
+    works in the flattened logit space and rows reshape at the boundary.
+    """
+    routed = joint.ndim == 3
+    shape = _row_shape(env, routed)
+    proj = E.project_feasible_routed if routed else E.project_feasible
     base = jnp.abs(E.player_reward(
-        env, E.project_feasible(env, joint, tau), tau, peak_state, objective)[i]) + 1e-6
+        env, proj(env, joint, tau), tau, peak_state, objective)[i]) + 1e-6
     reward_of = _player_reward_closure(env, tau, objective, peak_state, joint, i, base)
-    state_of = _state_of(env, tau, i, mode)
+    state_of = _state_of(env, tau, i, mode, routed)
+    own_logits = jnp.log(joint[..., i, :] + 1e-9).reshape(-1)
 
     def state0_fn(k):
         # start episodes around the current strategy with Dirichlet jitter
-        alpha = joint[i] * 20.0 + 0.5
-        fr = jax.random.dirichlet(k, jnp.broadcast_to(alpha, (ppo_cfg.episodes, alpha.shape[0])))
+        alpha = joint[..., i, :] * 20.0 + 0.5
+        fr = jax.random.dirichlet(
+            k, jnp.broadcast_to(alpha, (ppo_cfg.episodes,) + alpha.shape))
+        fr = fr.reshape(ppo_cfg.episodes, -1)
         if mode == "strategy":
             return fr
-        ctxf = _ctx_features(env, tau, i)
+        ctxf = _ctx_features(env, tau, i, routed)
         return jnp.concatenate([fr, jnp.broadcast_to(ctxf, (ppo_cfg.episodes, ctxf.shape[0]))], axis=1)
 
     k_ppo, k_cand = jax.random.split(key)
@@ -117,13 +169,13 @@ def _one_player_round(key, agent, env, tau, objective, peak_state, joint, i, mod
     # proposal minimizes its own objective, never regressing below its current
     # row. This is the game-theoretic step; PPO supplies the proposal
     # distribution (paper §5.3: "the agent determines the optimal strategy").
-    state_now = state_of(jnp.log(joint[i] + 1e-9))
+    state_now = state_of(own_logits)
     mu = nets.actor_mean(agent.actor, state_now)
     std = jnp.exp(jnp.clip(agent.actor["log_std"], -4.0, 1.0))
     n_cand = 16
     eps = jax.random.normal(k_cand, (n_cand,) + mu.shape)
     cand_logits = jnp.concatenate(
-        [mu[None], jnp.log(joint[i] + 1e-9)[None], mu[None] + std * eps], axis=0)
+        [mu[None], own_logits[None], mu[None] + std * eps], axis=0)
     rewards = jax.vmap(reward_of)(cand_logits)
     best_logits = cand_logits[jnp.argmax(rewards)]
     # ... then the game's rapid best-reply refinement polishes BOTH the
@@ -141,11 +193,11 @@ def _one_player_round(key, agent, env, tau, objective, peak_state, joint, i, mod
         out, _ = jax.lax.scan(polish, logits0, None, length=polish_steps)
         return out
 
-    starts = jnp.stack([best_logits, jnp.log(joint[i] + 1e-9)])
+    starts = jnp.stack([best_logits, own_logits])
     polished = jax.vmap(run_polish)(starts)
     finals = jnp.concatenate([polished, starts], axis=0)
     final_rewards = jax.vmap(reward_of)(finals)
-    row = jax.nn.softmax(finals[jnp.argmax(final_rewards)])
+    row = jax.nn.softmax(finals[jnp.argmax(final_rewards)].reshape(shape), axis=-1)
     return agent, row
 
 
@@ -187,7 +239,11 @@ def half_update(agents, joint, key_r, parity: int, ctx: GameContext,
     """
     env = ctx.env
     i_n = E.num_players(env)
+    routed = joint.ndim == 3
     keys = jax.random.split(key_r, i_n)
+    # vmapped rows arrive player-major ((n,) + row_shape); a routed joint is
+    # source-major (S, I, D), so scatters move the player axis back to -2
+    to_joint = (lambda rows: jnp.moveaxis(rows, 0, 1)) if routed else (lambda rows: rows)
     if cfg.half_update == "gather":
         idx = jnp.arange(parity, i_n, 2)
         sub = jax.tree_util.tree_map(lambda x: x[idx], agents)
@@ -195,7 +251,7 @@ def half_update(agents, joint, key_r, parity: int, ctx: GameContext,
                                  ctx.objective, peak_state, joint, cfg)
         agents = jax.tree_util.tree_map(
             lambda full, new: full.at[idx].set(new), agents, sub)
-        return agents, joint.at[idx].set(rows)
+        return agents, joint.at[..., idx, :].set(to_joint(rows))
     if cfg.half_update != "masked":
         raise ValueError(f"unknown half_update {cfg.half_update!r}")
     new_agents, rows = _run_players(keys, agents, jnp.arange(i_n), env, ctx.tau,
@@ -205,7 +261,8 @@ def half_update(agents, joint, key_r, parity: int, ctx: GameContext,
         lambda old, new: jnp.where(
             active.reshape((i_n,) + (1,) * (new.ndim - 1)), new, old),
         agents, new_agents)
-    return agents, jnp.where(active[:, None], rows, joint)
+    mask = active[None, :, None] if routed else active[:, None]
+    return agents, jnp.where(mask, to_joint(rows), joint)
 
 
 def solve_epoch(
@@ -246,6 +303,7 @@ def pretrain(
     env: E.EnvParams,
     objective: str,
     cfg: GTDRLConfig,
+    routed: bool = False,
 ) -> AgentState:
     """Offline training over random (tau, arrival-scale, strategy) contexts.
 
@@ -257,7 +315,8 @@ def pretrain(
     sequential scan is ``pretrain_iters / pretrain_batch`` steps long.
     """
     i_n, d = E.num_players(env), E.num_dcs(env)
-    agents = init_agents(key, env, cfg)
+    joint_shape = _row_shape(env, routed)[:-1] + (i_n, d)
+    agents = init_agents(key, env, cfg, routed)
     peak0 = jnp.zeros((d,))
     batch = max(1, cfg.pretrain_batch)
     steps = -(-cfg.pretrain_iters // batch)  # ceil
@@ -265,7 +324,7 @@ def pretrain(
     def one_ctx(agents, key_t):
         k1, k2, k3 = jax.random.split(key_t, 3)
         tau = jax.random.randint(k1, (), 0, 24)
-        joint = jax.random.dirichlet(k2, jnp.ones((i_n, d)))
+        joint = jax.random.dirichlet(k2, jnp.ones(joint_shape))
         keys = jax.random.split(k3, i_n)
         agents, _ = _run_players(keys, agents, jnp.arange(i_n), env, tau,
                                  objective, peak0, joint, cfg)

@@ -26,13 +26,18 @@ class NashConfig:
 
 
 def _best_reply(ctx: GameContext, peak_state, fractions, i, cfg: NashConfig):
-    """Local projected-gradient best response of player i."""
+    """Local projected-gradient best response of player i.
+
+    A player's strategy is its (D,) simplex row — or, in a routed game, its
+    (S, D) routing matrix (softmax per source row); the logit-space descent
+    is identical either way.
+    """
 
     def obj(logits):
-        f = fractions.at[i].set(jax.nn.softmax(logits))
+        f = fractions.at[..., i, :].set(jax.nn.softmax(logits, axis=-1))
         return player_rewards(ctx, f, peak_state)[i]
 
-    logits0 = jnp.log(fractions[i] + 1e-9)
+    logits0 = jnp.log(fractions[..., i, :] + 1e-9)
 
     def step(logits, _):
         g = jax.grad(obj)(logits)
@@ -40,7 +45,8 @@ def _best_reply(ctx: GameContext, peak_state, fractions, i, cfg: NashConfig):
 
     logits, _ = jax.lax.scan(step, logits0, None, length=cfg.inner_steps)
     better = obj(logits) < obj(logits0)
-    return jnp.where(better, jax.nn.softmax(logits), fractions[i])
+    return jnp.where(better, jax.nn.softmax(logits, axis=-1),
+                     fractions[..., i, :])
 
 
 def solve_epoch(key, ctx: GameContext, peak_state: jnp.ndarray,
@@ -52,7 +58,7 @@ def solve_epoch(key, ctx: GameContext, peak_state: jnp.ndarray,
     def sweep(f, _):
         def per_player(j, f):
             row = _best_reply(ctx, peak_state, f, j, cfg)
-            return f.at[j].set(row)
+            return f.at[..., j, :].set(row)
 
         f = jax.lax.fori_loop(0, i_n, per_player, f)
         return f, cloud_objective(ctx, f, peak_state)

@@ -12,6 +12,7 @@ from typing import Tuple
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 
 from .game import GameContext, SolveResult, cloud_objective, uniform_fractions
 from .ppo import AgentState, PPOConfig, agent_init, greedy_fractions, ppo_improve
@@ -25,8 +26,8 @@ class JointPPOConfig:
 
 def solve_epoch(key, ctx: GameContext, peak_state: jnp.ndarray,
                 cfg: JointPPOConfig = JointPPOConfig()) -> SolveResult:
-    i_n, d = ctx.num_players(), ctx.num_dcs()
-    sdim = adim = i_n * d
+    joint = ctx.joint_shape()  # (I, D), or (S, I, D) for routed games
+    sdim = adim = int(np.prod(joint))
     k1, k2 = jax.random.split(key)
     agent = agent_init(k1, sdim, adim, cfg.ppo)
 
@@ -34,7 +35,7 @@ def solve_epoch(key, ctx: GameContext, peak_state: jnp.ndarray,
     scale = jnp.abs(cloud_objective(ctx, f0, peak_state)) + 1e-6
 
     def to_f(logits):
-        return jax.nn.softmax(logits.reshape(i_n, d), axis=-1)
+        return jax.nn.softmax(logits.reshape(joint), axis=-1)
 
     def reward_of(logits):
         return -cloud_objective(ctx, to_f(logits), peak_state) / scale

@@ -25,6 +25,12 @@ Three engines share that protocol:
   ``jax.device_get`` at day end. All engines produce matching metrics for
   the same technique/seed.
 
+Every engine takes ``routed=True`` to play the per-source routing game:
+the action space grows to the (S, I, D) tensor, SLA misses are priced per
+(source, task) path, and GT-DRL agents are sized for the (S, D) strategy.
+With the degenerate S = 1 aggregate origin the routed engines run the
+unrouted program and reproduce its numbers bit-for-bit.
+
 Performance is tracked machine-readably: ``make bench-smoke`` runs
 ``benchmarks.run --only scenarios,engine --json BENCH_engine.json`` so every
 perf PR appends loop-vs-scan-vs-batched day timings and GT-DRL round
@@ -71,15 +77,17 @@ class GTDRLScheduler:
     """
 
     def __init__(self, env: E.EnvParams, objective: str, cfg: Optional[gt_drl.GTDRLConfig] = None,
-                 pretrain_key=None, agents=None):
+                 pretrain_key=None, agents=None, routed: bool = False):
         self.cfg = cfg or gt_drl.GTDRLConfig()
         self.objective = objective
         if agents is not None:
             self.agents = agents
         elif pretrain_key is not None:
-            self.agents = gt_drl.pretrain(pretrain_key, env, objective, self.cfg)
+            self.agents = gt_drl.pretrain(pretrain_key, env, objective, self.cfg,
+                                          routed)
         else:
-            self.agents = gt_drl.init_agents(jax.random.PRNGKey(0), env, self.cfg)
+            self.agents = gt_drl.init_agents(jax.random.PRNGKey(0), env, self.cfg,
+                                             routed)
         self._solve = _gtdrl_solve(self.cfg)
 
     def solve_epoch(self, key, ctx: GameContext, peak_state) -> SolveResult:
@@ -88,16 +96,18 @@ class GTDRLScheduler:
 
 
 def get_scheduler(name: str, env: E.EnvParams, objective: str,
-                  pretrain_key=None, **overrides) -> Callable:
+                  pretrain_key=None, routed: bool = False, **overrides) -> Callable:
     """Returns solve_epoch(key, ctx, peak_state) -> SolveResult, jitted so a
-    24-epoch day compiles once (GameContext is a pytree; tau is traced)."""
+    24-epoch day compiles once (GameContext is a pytree; tau is traced).
+    ``routed`` sizes GT-DRL agents for the (S, I, D) routing game (the other
+    techniques read the joint-strategy shape off the ctx at solve time)."""
     if name in _MODS:
         mod, default_cfg = _MODS[name]
         cfg = overrides.get("cfg", default_cfg)
         return jax.jit(functools.partial(mod.solve_epoch, cfg=cfg))
     if name == "gt-drl":
         sched = GTDRLScheduler(env, objective, overrides.get("cfg"), pretrain_key,
-                               overrides.get("agents"))
+                               overrides.get("agents"), routed)
         return sched.solve_epoch
     raise KeyError(f"unknown technique {name!r}; known: {TECHNIQUES}")
 
@@ -126,11 +136,13 @@ def _solver_step(technique: str, cfg) -> Callable:
 
 
 @functools.lru_cache(maxsize=None)
-def _day_core(technique: str, objective: str, hours: int, cfg) -> Callable:
+def _day_core(technique: str, objective: str, hours: int, cfg,
+              routed: bool = False) -> Callable:
     """day(env, key, peak0, state0) -> (peak, state, metrics (hours,)-dict).
 
     Pure and jit/vmap-friendly; the RNG key is split exactly as the
     reference loop does, so both engines see the same per-epoch keys.
+    ``routed`` plays the (S, I, D) routing game instead of the (I, D) one.
     """
     step = _solver_step(technique, cfg)
 
@@ -138,7 +150,8 @@ def _day_core(technique: str, objective: str, hours: int, cfg) -> Callable:
         def body(carry, tau):
             key, peak, state = carry
             key, ks = jax.random.split(key)
-            ctx = GameContext(env=env, tau=tau, objective=objective)
+            ctx = GameContext(env=env, tau=tau, objective=objective,
+                              routed=routed)
             state, res = step(ks, state, ctx, peak)
             ar = fractions_to_ar(ctx, res.fractions)
             peak, m = E.step_epoch(env, peak, ar, tau)
@@ -152,22 +165,25 @@ def _day_core(technique: str, objective: str, hours: int, cfg) -> Callable:
 
 
 @functools.lru_cache(maxsize=None)
-def _compiled_day(technique: str, objective: str, hours: int, cfg) -> Callable:
-    return jax.jit(_day_core(technique, objective, hours, cfg))
+def _compiled_day(technique: str, objective: str, hours: int, cfg,
+                  routed: bool = False) -> Callable:
+    return jax.jit(_day_core(technique, objective, hours, cfg, routed))
 
 
 @functools.lru_cache(maxsize=None)
-def _compiled_batch(technique: str, objective: str, hours: int, cfg) -> Callable:
+def _compiled_batch(technique: str, objective: str, hours: int, cfg,
+                    routed: bool = False) -> Callable:
     """One compile for a whole fleet: vmap the day core over (env, key)."""
-    core = _day_core(technique, objective, hours, cfg)
+    core = _day_core(technique, objective, hours, cfg, routed)
     return jax.jit(jax.vmap(core, in_axes=(0, 0, None, None)))
 
 
 @functools.lru_cache(maxsize=None)
-def _compiled_month(technique: str, objective: str, hours: int, cfg) -> Callable:
+def _compiled_month(technique: str, objective: str, hours: int, cfg,
+                    routed: bool = False) -> Callable:
     """month(env_days, keys, peak0, state0): scan the day core over days,
     threading (peak, solver state) — the monthly-peak charge accumulates."""
-    day = _day_core(technique, objective, hours, cfg)
+    day = _day_core(technique, objective, hours, cfg, routed)
 
     def month(env_days, keys, peak0, state0):
         def body(carry, x):
@@ -184,7 +200,7 @@ def _compiled_month(technique: str, objective: str, hours: int, cfg) -> Callable
 
 
 def _day_inputs(env, technique, objective, seed, pretrain, cfg,
-                solver_state0=None):
+                solver_state0=None, routed: bool = False):
     """Replicates the reference loop's key discipline + initial solver state.
 
     An injected ``solver_state0`` short-circuits state construction (no
@@ -196,8 +212,8 @@ def _day_inputs(env, technique, objective, seed, pretrain, cfg,
         return key, solver_state0
     if technique == "gt-drl":
         c = cfg or gt_drl.GTDRLConfig()
-        state0 = (gt_drl.pretrain(kp, env, objective, c) if pretrain
-                  else gt_drl.init_agents(jax.random.PRNGKey(0), env, c))
+        state0 = (gt_drl.pretrain(kp, env, objective, c, routed) if pretrain
+                  else gt_drl.init_agents(jax.random.PRNGKey(0), env, c, routed))
     else:
         state0 = ()
     return key, state0
@@ -226,16 +242,18 @@ def run_day_scan(
     peak_state0: Optional[jnp.ndarray] = None,
     cfg_override: Any = None,
     solver_state0: Any = None,
+    routed: bool = False,
 ) -> Dict[str, Any]:
     """One technique through a day as a single jitted lax.scan call.
 
     ``solver_state0`` injects an initial solver state (deployed GT-DRL
-    agents), overriding the pretrain/init derived from ``seed``.
+    agents), overriding the pretrain/init derived from ``seed``. ``routed``
+    plays the per-source routing game over the (S, I, D) tensor.
     """
     key, state0 = _day_inputs(env, technique, objective, seed, pretrain,
-                              cfg_override, solver_state0)
+                              cfg_override, solver_state0, routed)
     peak0 = peak_state0 if peak_state0 is not None else jnp.zeros((E.num_dcs(env),))
-    day = _compiled_day(technique, objective, hours, cfg_override)
+    day = _compiled_day(technique, objective, hours, cfg_override, routed)
     _, _, ms = day(env, key, peak0, state0)
     return _format_day(ms, hours, technique, objective)
 
@@ -250,6 +268,7 @@ def run_days_batched(
     pretrain: bool = True,
     cfg_override: Any = None,
     solver_state0: Any = None,
+    routed: bool = False,
 ) -> Dict[str, Any]:
     """Evaluate a fleet of scenario-days in ONE compiled vmapped call.
 
@@ -279,10 +298,10 @@ def run_days_batched(
     # ONCE on the first seed's pretrain key (deploy-once semantics)
     keys = jnp.stack([jax.random.split(jax.random.PRNGKey(s))[1] for s in seeds])
     _, state0 = _day_inputs(env0, technique, objective, seeds[0], pretrain,
-                            cfg_override, solver_state0)
+                            cfg_override, solver_state0, routed)
     peak0 = jnp.zeros((E.num_dcs(env0),))
 
-    batch = _compiled_batch(technique, objective, hours, cfg_override)
+    batch = _compiled_batch(technique, objective, hours, cfg_override, routed)
     _, _, ms = batch(env_b, keys, peak0, state0)
     out = {k: np.asarray(v) for k, v in ms.items()}  # (n, hours) each
     totals = {k: out[k].sum(axis=1) for k in _TOTAL_KEYS}
@@ -302,6 +321,7 @@ def run_month(
     peak_state0: Optional[jnp.ndarray] = None,
     cfg_override: Any = None,
     solver_state0: Any = None,
+    routed: bool = False,
 ) -> Dict[str, Any]:
     """Month-scale episode: a second-level lax.scan over days in ONE compile.
 
@@ -333,10 +353,10 @@ def run_month(
     keys = jnp.stack(
         [jax.random.split(jax.random.PRNGKey(seed + d))[1] for d in range(n)])
     _, state0 = _day_inputs(env0, technique, objective, seed, pretrain,
-                            cfg_override, solver_state0)
+                            cfg_override, solver_state0, routed)
     peak0 = peak_state0 if peak_state0 is not None else jnp.zeros((E.num_dcs(env0),))
 
-    month = _compiled_month(technique, objective, hours, cfg_override)
+    month = _compiled_month(technique, objective, hours, cfg_override, routed)
     final_peak, _, ms, peaks = month(env_days, keys, peak0, state0)
     per_day = {k: np.asarray(v) for k, v in ms.items()}  # (n, hours) each
     day_totals = {k: per_day[k].sum(axis=1) for k in _TOTAL_KEYS}
@@ -363,6 +383,7 @@ def run_day(
     solver: Optional[Callable] = None,
     solver_state0: Any = None,
     engine: str = "scan",
+    routed: bool = False,
 ) -> Dict[str, Any]:
     """Run one technique through a day; returns per-epoch + total metrics.
 
@@ -370,19 +391,23 @@ def run_day(
     the reference Python hour-loop. A prebuilt ``solver`` closure forces the
     loop engine (the closure may carry state across calls/runs);
     ``solver_state0`` injects initial solver state into the scan engine.
+    ``routed`` plays the (S, I, D) routing game in either engine; with the
+    degenerate S = 1 origin it reproduces the unrouted numbers bit-for-bit.
     """
     if engine not in ("scan", "loop"):
         raise ValueError(f"unknown engine {engine!r}; known: scan, loop")
     if solver is None and engine == "scan":
         return run_day_scan(env, technique, objective, seed=seed, hours=hours,
                             pretrain=pretrain, peak_state0=peak_state0,
-                            cfg_override=cfg_override, solver_state0=solver_state0)
+                            cfg_override=cfg_override, solver_state0=solver_state0,
+                            routed=routed)
     key = jax.random.PRNGKey(seed)
     kp, key = jax.random.split(key)
     if solver is None:
         solver = get_scheduler(
             technique, env, objective,
             pretrain_key=kp if (technique == "gt-drl" and pretrain) else None,
+            routed=routed,
             **({"cfg": cfg_override} if cfg_override is not None else {}),
         )
     d = E.num_dcs(env)
@@ -390,7 +415,8 @@ def run_day(
     epoch_metrics: List[Dict[str, jnp.ndarray]] = []
     for tau in range(hours):
         key, ks = jax.random.split(key)
-        ctx = GameContext(env=env, tau=jnp.int32(tau), objective=objective)
+        ctx = GameContext(env=env, tau=jnp.int32(tau), objective=objective,
+                          routed=routed)
         res = solver(ks, ctx, peak)
         ar = fractions_to_ar(ctx, res.fractions)
         peak, m = E.step_epoch(env, peak, ar, jnp.int32(tau))
@@ -428,6 +454,7 @@ def compare_techniques(
     seed0: int = 0,
     engine: str = "batched",
     cfg_overrides: Optional[Dict[str, Any]] = None,
+    routed: bool = False,
 ) -> Dict[str, Dict[str, Any]]:
     """The paper's protocol: several runs (one env per resampled arrival
     pattern), mean±stderr of daily totals. The ranked metric is daily carbon
@@ -459,7 +486,7 @@ def compare_techniques(
     def deployed_agents(cfg):
         c = cfg or gt_drl.GTDRLConfig()
         return gt_drl.pretrain(jax.random.PRNGKey(seed0 + 999), envs[0],
-                               objective, c)
+                               objective, c, routed)
 
     if engine == "loop":
         for t in techniques:
@@ -473,7 +500,7 @@ def compare_techniques(
                 s = (GTDRLScheduler(env, objective, cfg, agents=agents0).solve_epoch
                      if t == "gt-drl" else solver)
                 res = run_day(env, t, objective, seed=seeds[r], hours=hours,
-                              solver=s, engine="loop")
+                              solver=s, engine="loop", routed=routed)
                 vals.append(res["totals"][metric])
                 curves.append([e[metric] for e in res["per_epoch"]])
             out[t] = _stats(vals, curves)
@@ -484,6 +511,7 @@ def compare_techniques(
         cfg = overrides.get(t)
         state0 = deployed_agents(cfg) if t == "gt-drl" else None
         res = run_days_batched(env_b, t, objective, seeds=seeds, hours=hours,
-                               cfg_override=cfg, solver_state0=state0)
+                               cfg_override=cfg, solver_state0=state0,
+                               routed=routed)
         out[t] = _stats(res["totals"][metric], res["per_epoch"][metric])
     return out

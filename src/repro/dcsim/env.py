@@ -19,13 +19,20 @@ field / quantity      shape      unit
 ``peak_price``        (D,)       $/kW-month (applied to peak W/1000)
 ``nprice``            scalar     $/GB (× ``sizes`` GB/task × AR tasks/h → $/h)
 ``carbon``            (D, 24)    kg CO₂ / kWh (→ kg/h)
-``rtt``               (D, D)|(D,) ms round-trip between regions (row = source);
-                                 a (D,) vector is the mean access RTT directly
+``rtt``               (D, D)     ms round-trip between regions (row = source);
+                                 canonical — the old (D,) mean-RTT vector form
+                                 is gone (routing needs per-path values)
 ``sla_ms``            (I,)       ms response-time target per task type
 ``sla_price``         (I,)       $/task charged per expected SLA miss
 ``sla_weight``        scalar     weight of the SLA term in ``cost_sla`` rewards
+``origin``            (S, I, 24) demand-origin split: fraction of task i's
+                                 hour-t arrivals sourced from region s (sums
+                                 to 1 over s); S = D (sources = DC regions,
+                                 the default) or S = 1 (aggregate source)
 latency               (I, D)     ms = access RTT + M/M/c-style queued service
+routed latency        (S, I, D)  ms = rtt[s, d] + the same queued sojourn
 SLA miss cost         (I, D)     $/h = sla_price · AR · p_miss(latency, sla_ms)
+routed SLA miss cost  (S, I, D)  $/h priced per (source, task) path
 ====================  =========  =================================================
 
 Beyond-paper extensions for the scenario engine (``repro.scenarios``):
@@ -37,6 +44,16 @@ curtailment). The SLA/latency subsystem (``dcsim.latency``) adds ``rtt``,
 (``rtt = 0``, ``sla_price = 0``) every SLA term is exactly zero. With
 ``avail == 1``, a constant carbon profile and the default SLA fields the
 model reduces exactly to the paper's.
+
+Per-source request routing (beyond-paper): ``origin`` (S, I, 24) records
+*where* each task type's demand comes from, and the routed action space is
+an (S, I, D) tensor — which region's requests go to which DC. The routed
+functions (``project_feasible_routed``, ``latency_ms_routed``,
+``sla_cost_routed``) price response time per (source, task) path instead of
+against the fleet-mean access RTT; ``step_epoch``/``player_reward`` accept
+either an (I, D) or an (S, I, D) assignment. The degenerate S = 1 aggregate
+source reproduces the unrouted model bit-for-bit (its single source row is
+the uniform-origin mean RTT), and is the parity reference for the engines.
 """
 from __future__ import annotations
 
@@ -67,10 +84,11 @@ class EnvParams(NamedTuple):
     nn_total: jnp.ndarray    # (D,) node count
     car: jnp.ndarray         # (I, 24) cloud arrival rates
     avail: jnp.ndarray       # (D, 24) capacity availability in [0, 1]
-    rtt: jnp.ndarray         # (D, D) inter-region RTT ms, or (D,) mean access RTT
+    rtt: jnp.ndarray         # (D, D) inter-region RTT ms (canonical; row = source)
     sla_ms: jnp.ndarray      # (I,) response-time SLA target, ms
     sla_price: jnp.ndarray   # (I,) $/task per expected SLA miss (0 = unpriced)
     sla_weight: jnp.ndarray  # scalar weight of the SLA term under "cost_sla"
+    origin: jnp.ndarray      # (S, I, 24) demand-origin split, sums to 1 over s
 
 
 # ---------------------------------------------------------------------------
@@ -141,6 +159,10 @@ def build_env(
         sla_ms=f(latency.default_sla_ms(er, nn.sum(axis=1))),
         sla_price=jnp.zeros(len(sizes)),
         sla_weight=jnp.float32(1.0),
+        # demand origins: uniform across the DC regions (S = D). Routing only
+        # matters once rtt is non-zero and origins are shifted; the default
+        # reduces the routed model to the paper's exactly.
+        origin=jnp.full((num_dcs, len(sizes), 24), 1.0 / num_dcs),
     )
 
 
@@ -175,6 +197,76 @@ def capacity_at(env: EnvParams, tau) -> jnp.ndarray:
     each DC's nodes being powered; the paper's setting is avail ≡ 1.
     """
     return env.er * env.avail[:, tau][None, :]
+
+
+# ---------------------------------------------------------------------------
+# per-source request routing: the (S, I, D) decision surface
+# ---------------------------------------------------------------------------
+
+def num_sources(env: EnvParams) -> int:
+    return env.origin.shape[0]
+
+
+def origin_at(env: EnvParams, tau) -> jnp.ndarray:
+    """(S, I) demand-origin split at hour tau (columns sum to 1 over s)."""
+    return env.origin[:, :, tau]
+
+
+def source_rtt(env: EnvParams) -> jnp.ndarray:
+    """(S, D) source-region → DC round trip.
+
+    Sources are either the DC regions themselves (S = D: the RTT matrix
+    verbatim) or the degenerate aggregate source (S = 1: the uniform-origin
+    row mean — exactly what the unrouted model prices, so S = 1 routing is
+    the bit-for-bit parity reference).
+    """
+    s, d = num_sources(env), num_dcs(env)
+    if s == d:
+        return env.rtt
+    if s == 1:
+        return jnp.mean(env.rtt, axis=0, keepdims=True)
+    raise ValueError(
+        f"origin has {s} source regions; expected {d} (DC regions) or 1")
+
+
+def aggregate_origin(env: EnvParams) -> EnvParams:
+    """Collapse ``origin`` to the degenerate S = 1 aggregate source.
+
+    The routed engines on the result reproduce the unrouted (PR 3) numbers
+    bit-for-bit: one source row at the uniform-origin mean RTT.
+    """
+    i = num_players(env)
+    return env._replace(origin=jnp.ones((1, i, 24), env.origin.dtype))
+
+
+def project_feasible_routed(env: EnvParams, fractions: jnp.ndarray, tau) -> jnp.ndarray:
+    """Map routing fractions (S, I, D) — simplex rows over D per (source,
+    task) — to a feasible routed assignment AR3 (S, I, D), tasks/h.
+
+    Feasibility is defined on the totals: Σ_s AR3 obeys eqs. (1)–(2) via the
+    same water-filling as the unrouted ``project_feasible`` applied to the
+    demand-aggregated fractions Σ_s origin[s, i] · fractions[s, i, :]. Each
+    feasible (i, d) cell is then split across sources in proportion to the
+    requested per-source mass (capacity shedding hits every source of a cell
+    equally); mass water-filled into cells no source requested splits by the
+    hour's origin mix. With S = 1 the routed projection *is*
+    ``project_feasible`` (one source owns all demand, origin ≡ 1): the
+    static shortcut keeps forward values and gradients bit-identical to the
+    unrouted game — the ratio path below is 1.0 in value but its quotient
+    rule would perturb gradients in the last ulp.
+    """
+    if fractions.shape[0] == 1:
+        return project_feasible(env, fractions[0], tau)[None]
+    origin = origin_at(env, tau)                                  # (S, I)
+    agg = jnp.sum(origin[:, :, None] * fractions, axis=0)         # (I, D)
+    ar = project_feasible(env, agg, tau)                          # (I, D)
+    demand = env.car[:, tau][None, :] * origin                    # (S, I)
+    req3 = demand[:, :, None] * fractions                         # (S, I, D)
+    req = jnp.sum(req3, axis=0)                                   # (I, D)
+    ratio = jnp.where(req[None] > 1e-9,
+                      req3 / jnp.maximum(req[None], 1e-9),
+                      origin[:, :, None])
+    return ar[None] * ratio
 
 
 # ---------------------------------------------------------------------------
@@ -325,6 +417,42 @@ def sla_cost_est(env: EnvParams, ar: jnp.ndarray, tau) -> jnp.ndarray:
     return jnp.sum(sla_cost(env, ar, tau), axis=1)
 
 
+def latency_ms_routed(env: EnvParams, ar: jnp.ndarray, tau) -> jnp.ndarray:
+    """(S, I, D) per-path response time: rtt[s, d] + queued sojourn.
+
+    ``ar`` is the assignment that sets utilization — either the (I, D)
+    totals or a routed (S, I, D) tensor (summed over sources internally;
+    queueing at a DC sees total load regardless of where it came from).
+    """
+    if ar.ndim == 3:
+        ar = jnp.sum(ar, axis=0)
+    rho = jnp.sum(ar / jnp.maximum(capacity_at(env, tau), 1e-9), axis=0)
+    return latency.expected_latency_ms_routed(env.er, env.nn_total, rho,
+                                              source_rtt(env))
+
+
+def sla_cost_routed(env: EnvParams, ar3: jnp.ndarray, tau,
+                    lat_ms: Optional[jnp.ndarray] = None) -> jnp.ndarray:
+    """(S, I, D) expected SLA-miss cost, $/h, priced per (source, task) path:
+    sla_price[i] · AR3[s, i, d] · p_miss(rtt[s, d] + sojourn[i, d]).
+
+    The unrouted ``sla_cost`` prices every request against the fleet-mean
+    access RTT; here a scheduler that keeps a region's requests nearby pays
+    less than one that back-hauls them cross-country — locality is finally
+    priced. ``lat_ms`` reuses an already-computed ``latency_ms_routed``.
+    """
+    lat3 = latency_ms_routed(env, ar3, tau) if lat_ms is None else lat_ms
+    p = latency.sla_miss_prob(lat3, env.sla_ms[None, :, None])
+    return env.sla_price[None, :, None] * ar3 * p
+
+
+def sla_cost_est_routed(env: EnvParams, ar3: jnp.ndarray, tau) -> jnp.ndarray:
+    """(I,) per-player SLA-miss cost of a routed assignment — the latency
+    term of the routed ``cost_sla`` objective. Identical to the detailed
+    simulator's charge by construction (same expected-miss pricing)."""
+    return jnp.sum(sla_cost_routed(env, ar3, tau), axis=(0, 2))
+
+
 OBJECTIVES = ("carbon", "cost", "cost_sla")
 
 
@@ -334,14 +462,22 @@ def player_reward(env, ar, tau, peak_state, objective: str) -> jnp.ndarray:
     ``carbon``: CET (eq. 12). ``cost``: CCT (eq. 17). ``cost_sla``: CCT plus
     ``sla_weight`` × the expected SLA-miss cost — the beyond-paper objective
     that prices computational performance into the game.
+
+    ``ar`` is the (I, D) allocation, or a routed (S, I, D) tensor — energy/
+    peak/network/carbon terms depend only on the totals Σ_s AR3, while the
+    SLA term prices each (source, task) path at its own RTT.
     """
+    ar3 = ar if ar.ndim == 3 else None
+    if ar3 is not None:
+        ar = jnp.sum(ar3, axis=0)
     if objective == "carbon":
         return cet_est(env, ar, tau)
     if objective == "cost":
         return cct_est(env, ar, tau, peak_state)
     if objective == "cost_sla":
-        return (cct_est(env, ar, tau, peak_state)
-                + env.sla_weight * sla_cost_est(env, ar, tau))
+        sla = (sla_cost_est(env, ar, tau) if ar3 is None
+               else sla_cost_est_routed(env, ar3, tau))
+        return cct_est(env, ar, tau, peak_state) + env.sla_weight * sla
     raise ValueError(f"unknown objective {objective!r}; known: {OBJECTIVES}")
 
 
@@ -390,10 +526,16 @@ def step_epoch(
 ) -> Tuple[jnp.ndarray, Dict[str, jnp.ndarray]]:
     """Simulate one epoch under assignment ``ar``; returns (new_peak, metrics).
 
-    ``latency_ms`` is the request-weighted mean response time over all
-    (task, DC) assignments; ``sla_miss_cost_usd`` rolls into ``cost_usd``
-    (it is exactly zero at the default ``sla_price = 0``).
+    ``ar`` is the (I, D) allocation or a routed (S, I, D) tensor; physics
+    (power, carbon, energy/peak/network bills) depends only on the totals,
+    while the SLA charge and the ``latency_ms`` metric are priced per
+    (source, task) path when routed. ``latency_ms`` is the request-weighted
+    mean response time over all assignments; ``sla_miss_cost_usd`` rolls
+    into ``cost_usd`` (exactly zero at the default ``sla_price = 0``).
     """
+    ar3 = ar if ar.ndim == 3 else None
+    if ar3 is not None:
+        ar = jnp.sum(ar3, axis=0)
     dp = grid_power(env, ar, tau)  # (D,) W, can be negative
     de = env.carbon[:, tau] * dp / 1000.0  # kg/h (negative = displaced grid carbon)
     a = jnp.where(dp > 0, 1.0, env.alpha)
@@ -402,8 +544,14 @@ def step_epoch(
     # $/GB × GB/task × tasks/h is already $/h (the seed divided by 1000 and
     # under-counted the detailed network bill 1000× vs the estimator)
     net_cost = jnp.sum(env.nprice * env.sizes[:, None] * ar, axis=0)
-    lat = latency_ms(env, ar, tau)          # (I, D) ms
-    sla = jnp.sum(sla_cost(env, ar, tau, lat_ms=lat), axis=0)  # (D,) $/h
+    if ar3 is None:
+        lat = latency_ms(env, ar, tau)          # (I, D) ms
+        sla = jnp.sum(sla_cost(env, ar, tau, lat_ms=lat), axis=0)  # (D,) $/h
+        lat_mean = jnp.sum(ar * lat) / jnp.maximum(jnp.sum(ar), 1e-9)
+    else:
+        lat = latency_ms_routed(env, ar3, tau)  # (S, I, D) ms per path
+        sla = jnp.sum(sla_cost_routed(env, ar3, tau, lat_ms=lat), axis=(0, 1))
+        lat_mean = jnp.sum(ar3 * lat) / jnp.maximum(jnp.sum(ar3), 1e-9)
     total_cost = energy_cost + delta + net_cost + sla
     viol = feasible_violation(env, ar, tau)
     rho = jnp.sum(ar / jnp.maximum(capacity_at(env, tau), 1e-9), axis=0)
@@ -414,7 +562,7 @@ def step_epoch(
         "peak_cost_usd": jnp.sum(delta),
         "network_cost_usd": jnp.sum(net_cost),
         "sla_miss_cost_usd": jnp.sum(sla),
-        "latency_ms": jnp.sum(ar * lat) / jnp.maximum(jnp.sum(ar), 1e-9),
+        "latency_ms": lat_mean,
         "grid_power_w": jnp.sum(jnp.maximum(dp, 0.0)),
         "violation": viol,
         "max_rho": jnp.max(rho),

@@ -10,10 +10,12 @@ Three pure, jittable pieces (plain array math — no EnvParams import, so
 ``dcsim.env`` can layer its latency/SLA accessors on top without a cycle):
 
 - **Network**: an inter-region RTT matrix from the great-circle distances of
-  ``topology.LOCATIONS`` coordinates (fiber speed ≈ c/1.5, a path-stretch
-  factor, per-direction hop overhead). Requests are assumed to originate
-  uniformly across the regions, so a (D, D) matrix reduces to the (D,) mean
-  access RTT over sources.
+  ``topology.location_coords()`` (fiber speed ≈ c/1.5, a path-stretch
+  factor, per-direction hop overhead). The canonical representation is the
+  full (D, D) matrix (row = source region); ``access_ms`` collapses it to
+  the (D,) uniform-origin mean for the unrouted model, while the routed
+  model (``expected_latency_ms_routed``) keeps the per-path values so the
+  (source → DC) split is a real decision surface.
 - **Queueing**: each DC is an M/M/c-style station whose c = NN_d nodes
   jointly serve at ER[i, d] tasks/h. The per-task service share is
   ``s_ms[i, d] = 3.6e6 · NN_d / ER[i, d]`` (node-internal core parallelism
@@ -77,9 +79,7 @@ def rtt_matrix(loc_indices: Optional[Sequence[int]] = None, *,
         assert num_dcs is not None, "need loc_indices or num_dcs"
         loc_indices = (topology.dc_locations(num_dcs) if num_dcs in (4, 8, 16)
                        else list(range(num_dcs)))
-    rows = [topology.LOCATIONS[i] for i in loc_indices]
-    lat = np.array([r[9] for r in rows])
-    lon = np.array([r[10] for r in rows])
+    lat, lon = topology.location_coords(loc_indices)
     dist = haversine_km(lat, lon)
     rtt = 2.0 * (dist * PATH_STRETCH / FIBER_KM_PER_MS + HOP_OVERHEAD_MS)
     np.fill_diagonal(rtt, 0.0)
@@ -87,10 +87,18 @@ def rtt_matrix(loc_indices: Optional[Sequence[int]] = None, *,
 
 
 def access_ms(rtt: jnp.ndarray) -> jnp.ndarray:
-    """(D,) mean access RTT: a (D, D) matrix averages over uniform request
-    origins (axis 0 = source region); a (D,) vector is already that mean."""
+    """(D,) mean access RTT over uniform request origins.
+
+    ``rtt`` must be the canonical (D, D) matrix (axis 0 = source region);
+    the old (D,)-vector alternate representation is gone — per-path values
+    are needed by the routed model, and the dual shape bred special cases
+    (``wan_degradation``'s scalar cross-path factor mispriced ``extra_ms``).
+    """
     rtt = jnp.asarray(rtt)
-    return jnp.mean(rtt, axis=0) if rtt.ndim == 2 else rtt
+    if rtt.ndim != 2:
+        raise ValueError(
+            f"rtt must be the canonical (D, D) matrix, got shape {rtt.shape}")
+    return jnp.mean(rtt, axis=0)
 
 
 # ---------------------------------------------------------------------------
@@ -114,6 +122,21 @@ def expected_latency_ms(er: jnp.ndarray, nn_total: jnp.ndarray,
                         rho: jnp.ndarray, rtt: jnp.ndarray) -> jnp.ndarray:
     """(I, D) expected response time: access RTT + queued service sojourn."""
     return access_ms(rtt)[None, :] + service_ms(er, nn_total) * queue_factor(rho)[None, :]
+
+
+def expected_latency_ms_routed(er: jnp.ndarray, nn_total: jnp.ndarray,
+                               rho: jnp.ndarray,
+                               src_rtt: jnp.ndarray) -> jnp.ndarray:
+    """(S, I, D) per-path response time: ``src_rtt[s, d]`` + queued sojourn.
+
+    ``src_rtt`` is the (S, D) source-region → DC round trip (``rtt`` itself
+    when sources are the DC regions; its uniform-origin row mean when S = 1,
+    the degenerate aggregate source that reproduces ``expected_latency_ms``
+    bit-for-bit). The queued sojourn is source-independent — requests queue
+    at the serving DC — so it broadcasts over the source axis.
+    """
+    sojourn = service_ms(er, nn_total) * queue_factor(rho)[None, :]
+    return src_rtt[:, None, :] + sojourn[None, :, :]
 
 
 # ---------------------------------------------------------------------------

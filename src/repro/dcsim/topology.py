@@ -88,6 +88,26 @@ LOCATIONS: Tuple[Tuple[str, str, int, float, float, float, float, float, float, 
 )
 
 
+# named column accessors for LOCATIONS rows — downstream code must not index
+# the tuple by magic position (a schema change would silently corrupt, e.g.,
+# the RTT matrix built from the trailing coordinate pair)
+LOC_LAT, LOC_LON = 9, 10
+
+
+def location_coords(loc_indices=None) -> Tuple[np.ndarray, np.ndarray]:
+    """(lat °N, lon °E) arrays for the given LOCATIONS rows (default: all).
+
+    The single named accessor for the coordinate columns; the geometry
+    regression test pins a known city-pair RTT through it, so a LOCATIONS
+    schema change breaks loudly instead of silently skewing distances.
+    """
+    rows = (LOCATIONS if loc_indices is None
+            else [LOCATIONS[i] for i in loc_indices])
+    lat = np.array([r[LOC_LAT] for r in rows], dtype=float)
+    lon = np.array([r[LOC_LON] for r in rows], dtype=float)
+    return lat, lon
+
+
 def dc_locations(num_dcs: int) -> List[int]:
     """Pick an even east/west coast mix as the paper does (Fig. 5)."""
     assert num_dcs in (4, 8, 16), num_dcs

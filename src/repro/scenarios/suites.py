@@ -49,6 +49,41 @@ SUITES: Dict[str, Dict[str, List[Scenario]]] = {
             Scenario("flash_crowd", {"start": 17, "duration": 5, "magnitude": 2.0}),
         ],
     },
+    # per-source routing family: SLA priced + WAN visible + demand origins
+    # shifted/regionalized, so the (source → DC) split is worth optimizing
+    # (evaluate with objective="cost_sla" and routed=True engines; source
+    # indices assume the 4-DC fleet: 0=NY, 1=SF, 2=Dallas, 3=Seattle)
+    "routing": {
+        "uniform-origin": [
+            Scenario("sla_tighten", {"tighten": 0.6}),
+            Scenario("wan_degradation", {"factor": 3.0, "extra_ms": 30.0}),
+        ],
+        "east-business-day": [
+            Scenario("sla_tighten", {"tighten": 0.6}),
+            Scenario("wan_degradation", {"factor": 3.0, "extra_ms": 30.0}),
+            Scenario("origin_shift", {"toward": [0], "weight": 0.7,
+                                      "start": 12, "duration": 10}),
+        ],
+        "west-evening": [
+            Scenario("sla_tighten", {"tighten": 0.6}),
+            Scenario("wan_degradation", {"factor": 3.0, "extra_ms": 30.0}),
+            Scenario("origin_shift", {"toward": [1, 3], "weight": 0.7,
+                                      "start": 0, "duration": 8}),
+        ],
+        "regional-flash-crowd": [
+            Scenario("sla_tighten", {"tighten": 0.7}),
+            Scenario("wan_degradation", {"factor": 2.0, "extra_ms": 20.0}),
+            Scenario("flash_crowd", {"start": 18, "duration": 4,
+                                     "magnitude": 2.5, "sources": [0]}),
+        ],
+        "shifted-wan-crunch": [
+            Scenario("sla_tighten", {"tighten": 0.6}),
+            Scenario("wan_degradation", {"factor": 4.0, "extra_ms": 40.0}),
+            Scenario("origin_shift", {"toward": [0], "weight": 0.8}),
+            Scenario("demand_response", {"dc": 0, "start": 14, "duration": 6,
+                                         "curtail": 0.5}),
+        ],
+    },
     # the full stress family: traffic, infrastructure and grid events
     "stress": {
         "baseline": [Scenario("identity")],

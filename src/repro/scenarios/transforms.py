@@ -4,7 +4,8 @@ Each factory returns a pure ``EnvParams -> EnvParams`` transform (the stress
 families benchmarked in DCcluster-Opt, arXiv:2511.00117, and the perturbed
 heterogeneous regimes of Green-LLM, arXiv:2507.09942):
 
-- ``flash_crowd``        traffic surge in an hour window (× magnitude)
+- ``flash_crowd``        traffic surge in an hour window (× magnitude);
+                         ``sources=`` makes it regional (origin tilts there)
 - ``dc_outage``          one DC's capacity zeroed for a window (avail mask)
 - ``carbon_spike``       grid carbon-intensity surge in a window
 - ``carbon_diurnal``     marginal-carbon dip at local midday (solar on grid)
@@ -15,6 +16,7 @@ heterogeneous regimes of Green-LLM, arXiv:2507.09942):
 - ``arrival_resample``   the paper's per-run normal resampling of arrivals
 - ``sla_tighten``        enable/tighten SLA targets and price misses
 - ``wan_degradation``    inter-region RTT inflated (congestion/reroute event)
+- ``origin_shift``       demand origins tilted toward given source regions
 - ``identity``           no-op (baseline rows in suites)
 
 Windows are ``[start, start+duration)`` in UTC hours, wrapping modulo 24.
@@ -67,12 +69,36 @@ def identity() -> Transform:
 
 @register("flash_crowd")
 def flash_crowd(start: int = 18, duration: int = 3, magnitude: float = 3.0,
-                tasks: Optional[Sequence[int]] = None) -> Transform:
-    """Traffic surge: arrivals × magnitude in the window (all or some types)."""
+                tasks: Optional[Sequence[int]] = None,
+                sources: Optional[Sequence[int]] = None) -> Transform:
+    """Traffic surge: arrivals × magnitude in the window (all or some types).
+
+    ``sources`` makes the surge *regional*: the extra demand originates at
+    the given source regions (a stadium event, a regional launch), so the
+    window's ``origin`` split tilts toward them — total origin mass per
+    (task, hour) stays 1. Default (None) keeps the surge origin-neutral.
+    """
     def t(env: EnvParams) -> EnvParams:
         mask = _rows(env.car.shape[0], tasks)
-        return env._replace(
-            car=_scale_field(env.car, mask, _window(start, duration), magnitude))
+        hour = _window(start, duration)
+        out = env._replace(
+            car=_scale_field(env.car, mask, hour, magnitude))
+        if sources is not None:
+            # mult (I, 24): the same per-cell factor applied to car; the
+            # surge's (mult - 1)·car extra demand all lands on ``sources``
+            mult = 1.0 + (magnitude - 1.0) * np.outer(mask, hour)
+            origin = np.asarray(env.origin, dtype=float)      # (S, I, 24)
+            src = np.zeros(origin.shape[0])
+            src[np.asarray(sources)] = 1.0 / len(sources)
+            shifted = ((origin + (mult - 1.0)[None] * src[:, None, None])
+                       / np.maximum(mult, 1e-9)[None])
+            # a regional *dip* (magnitude < 1) can't drain a source below
+            # zero — clamp and renormalize so origin stays a distribution
+            # (at magnitude 0 the window has no arrivals; origin is moot)
+            shifted = np.clip(shifted, 0.0, None)
+            shifted = shifted / shifted.sum(axis=0, keepdims=True)
+            out = out._replace(origin=jnp.asarray(shifted, env.origin.dtype))
+        return out
     return t
 
 
@@ -184,17 +210,45 @@ def wan_degradation(factor: float = 3.0, extra_ms: float = 20.0) -> Transform:
     """WAN congestion/reroute event: inter-region RTTs × ``factor`` plus
     ``extra_ms`` of queueing delay on every off-diagonal (cross-region)
     path. A zero (paper-default) RTT matrix is first seeded from the
-    canonical ``topology.LOCATIONS`` geometry, so the transform composes
-    onto default envs and onto already-degraded ones alike."""
+    canonical ``topology.location_coords`` geometry, so the transform
+    composes onto default envs and onto already-degraded ones alike.
+    ``rtt`` is always the canonical (D, D) matrix, so ``extra_ms`` lands
+    exactly on cross-region paths (the old (D,)-vector form smeared it with
+    a scalar (d-1)/d factor, mispricing every path)."""
     def t(env: EnvParams) -> EnvParams:
         rtt = np.asarray(env.rtt, dtype=float)
+        if rtt.ndim != 2:
+            raise ValueError(
+                f"rtt must be the canonical (D, D) matrix, got {rtt.shape}")
         d = rtt.shape[-1]
         if not rtt.any():
-            base = latency.rtt_matrix(num_dcs=d)
-            rtt = base.mean(axis=0) if rtt.ndim == 1 else base
-        cross = (1.0 - np.eye(d)) if rtt.ndim == 2 else (d - 1.0) / d
-        rtt = rtt * factor + extra_ms * cross
+            rtt = latency.rtt_matrix(num_dcs=d)
+        rtt = rtt * factor + extra_ms * (1.0 - np.eye(d))
         return env._replace(rtt=jnp.asarray(rtt, env.rtt.dtype))
+    return t
+
+
+@register("origin_shift")
+def origin_shift(toward: Sequence[int] = (0,), weight: float = 0.8,
+                 start: int = 0, duration: int = 24,
+                 tasks: Optional[Sequence[int]] = None) -> Transform:
+    """Shift the demand-origin split toward the given source regions.
+
+    In the window, the selected tasks' origins become the convex blend
+    ``(1 - weight) · origin + weight · uniform(toward)`` — e.g. a US-east
+    business day (``toward`` = the east-coast regions) or a regional market
+    launch. Mass per (task, hour) stays 1 over sources; only ``origin``
+    changes, so the unrouted model is blind to this event — exactly the gap
+    per-source routing closes.
+    """
+    def t(env: EnvParams) -> EnvParams:
+        origin = np.asarray(env.origin, dtype=float)          # (S, I, 24)
+        target = np.zeros(origin.shape[0])
+        target[np.asarray(toward)] = 1.0 / len(toward)
+        w = weight * np.outer(_rows(origin.shape[1], tasks),
+                              _window(start, duration))       # (I, 24)
+        shifted = (1.0 - w)[None] * origin + w[None] * target[:, None, None]
+        return env._replace(origin=jnp.asarray(shifted, env.origin.dtype))
     return t
 
 

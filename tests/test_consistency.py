@@ -79,6 +79,27 @@ def test_sla_estimator_matches_detailed_simulator():
     np.testing.assert_allclose(est, detailed, rtol=1e-5)
 
 
+def test_routed_sla_estimator_matches_detailed_simulator():
+    """Σ-estimator == simulator still holds with the SLA term priced per
+    (source, task): the routed reward decomposes into the same detailed
+    bills as the unrouted one."""
+    tau = 18
+    env = S.make("origin_shift", toward=[0], weight=0.8)(SLA_ENV)
+    f = jax.random.dirichlet(jax.random.PRNGKey(12),
+                             jnp.ones((4, 10, 4)) * 2.0)
+    ar3 = E.project_feasible_routed(env, f, tau)
+    peak = jnp.zeros((4,))
+    _, m = E.step_epoch(env, peak, ar3, tau)
+    assert float(m["sla_miss_cost_usd"]) > 0.0
+    np.testing.assert_allclose(
+        float(jnp.sum(E.sla_cost_est_routed(env, ar3, tau))),
+        float(m["sla_miss_cost_usd"]), rtol=1e-5)
+    est = float(jnp.sum(E.player_reward(env, ar3, tau, peak, "cost_sla")))
+    detailed = float(m["energy_cost_usd"] + m["peak_cost_usd"]
+                     + m["network_cost_usd"] + m["sla_miss_cost_usd"])
+    np.testing.assert_allclose(est, detailed, rtol=1e-5)
+
+
 def test_network_cost_units():
     """$/GB × GB/task × tasks/h — no spurious 1/1000 anywhere."""
     tau = 10
@@ -175,6 +196,26 @@ def test_rtt_matrix_geometry():
     # coast-to-coast (NY-SF) must out-delay NY-Dallas
     assert rtt[0, 1] > rtt[0, 2]
     assert np.all(off < 300.0)  # continental US stays under 300 ms
+
+
+def test_location_coords_pins_known_city_pair_rtt():
+    """The named coordinate accessor + a pinned NY–SF distance/RTT: if the
+    LOCATIONS schema moves the (lat, lon) columns, this breaks loudly
+    instead of silently corrupting the whole RTT matrix."""
+    from repro.dcsim import topology as T
+    lat, lon = T.location_coords([0, 1])  # new-york, san-francisco
+    np.testing.assert_allclose(lat, [40.71, 37.77])
+    np.testing.assert_allclose(lon, [-74.01, -122.42])
+    d_km = L.haversine_km(lat, lon)[0, 1]
+    np.testing.assert_allclose(d_km, 4129.1, rtol=1e-3)  # great-circle NY–SF
+    rtt = L.rtt_matrix(num_dcs=4)
+    # 2 × (4129.1 km × 1.4 stretch / 200 km/ms + 2 ms hop) ≈ 61.8 ms
+    np.testing.assert_allclose(rtt[0, 1], 61.8, rtol=1e-2)
+    lat_all, lon_all = T.location_coords()
+    assert lat_all.shape == lon_all.shape == (len(T.LOCATIONS),)
+    # continental US bounding box: a schema shuffle lands outside it
+    assert np.all((24 < lat_all) & (lat_all < 49))
+    assert np.all((-125 < lon_all) & (lon_all < -66))
 
 
 def test_wan_degradation_raises_latency_metric():

@@ -1,0 +1,283 @@
+"""Per-source request routing: the (S, I, D) decision surface.
+
+Two families of guarantees:
+
+1. **Degenerate parity** — with the S = 1 aggregate origin, every routed
+   engine (scan, loop, month, batched) and every solver reproduces the
+   unrouted (PR 3) numbers *bit-for-bit*: the single source row is exactly
+   the uniform-origin mean RTT the unrouted model prices, and all routed
+   array math reduces to the same float ops.
+2. **Routing is a real decision surface** — on a non-uniform ``origin_shift``
+   env the routed game prices locality, the projection conserves per-source
+   demand, and a routed solver beats the source-blind split on SLA cost.
+"""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro import scenarios as S
+from repro.core import gt_drl
+from repro.core import schedulers as SCH
+from repro.core.force_directed import FDConfig
+from repro.core.game import GameContext, fractions_to_ar, uniform_fractions
+from repro.core.nash import NashConfig
+from repro.core.ppo import PPOConfig
+from repro.dcsim import env as E
+
+ENV = E.build_env(4, seed=0)
+# SLA priced + WAN visible: the regime where routing decisions matter
+SLA_ENV = S.make("wan_degradation", factor=3.0, extra_ms=30.0)(
+    S.make("sla_tighten", tighten=0.6, price=1e-4)(ENV))
+AGG = E.aggregate_origin(SLA_ENV)        # S = 1: the parity reference
+SHIFTED = S.make("origin_shift", toward=[0], weight=0.8)(SLA_ENV)
+
+FD_CFG = FDConfig(iters=40)
+NASH_CFG = NashConfig(sweeps=2, inner_steps=15)
+FAST_GTDRL = gt_drl.GTDRLConfig(
+    ppo=PPOConfig(horizon=4, episodes=16, iters=2, update_epochs=2),
+    rounds=1, polish_steps=10, pretrain_iters=2, pretrain_batch=2)
+
+KEY = jax.random.PRNGKey(0)
+PEAK = jnp.zeros((4,))
+
+
+def _exact(a, b, label=""):
+    assert a == b, (label, a, b)
+
+
+# ---------------------------------------------------------------------------
+# env-layer basics
+# ---------------------------------------------------------------------------
+
+def test_build_env_origin_is_uniform_over_dc_regions():
+    o = np.asarray(ENV.origin)
+    assert o.shape == (4, 10, 24)
+    np.testing.assert_allclose(o, 0.25)
+    np.testing.assert_allclose(o.sum(axis=0), 1.0)
+
+
+def test_source_rtt_shapes_and_aggregate_row():
+    assert E.source_rtt(SLA_ENV).shape == (4, 4)
+    np.testing.assert_array_equal(np.asarray(E.source_rtt(SLA_ENV)),
+                                  np.asarray(SLA_ENV.rtt))
+    agg = np.asarray(E.source_rtt(AGG))
+    assert agg.shape == (1, 4)
+    np.testing.assert_array_equal(agg[0],
+                                  np.asarray(jnp.mean(SLA_ENV.rtt, axis=0)))
+    bad = SLA_ENV._replace(origin=jnp.ones((3, 10, 24)) / 3.0)
+    with pytest.raises(ValueError):
+        E.source_rtt(bad)
+
+
+def test_access_ms_rejects_legacy_vector_rtt():
+    from repro.dcsim import latency as L
+    with pytest.raises(ValueError):
+        L.access_ms(jnp.zeros((4,)))
+
+
+def test_project_feasible_routed_conserves_per_source_demand():
+    """Σ_d AR3[s, i, d] == car[i] · origin[s, i] wherever the fleet has
+    headroom, totals obey capacity, and nothing is negative."""
+    env, tau = SHIFTED, 18
+    f = jax.random.dirichlet(KEY, jnp.ones((4, 10, 4)))
+    ar3 = E.project_feasible_routed(env, f, tau)
+    assert bool(jnp.all(ar3 >= 0))
+    tot = jnp.sum(ar3, axis=0)
+    er_t = E.capacity_at(env, tau)
+    assert bool(jnp.all(tot <= er_t * (1 + 1e-5)))
+    demand = env.car[:, tau][None, :] * E.origin_at(env, tau)
+    np.testing.assert_allclose(np.asarray(jnp.sum(ar3, axis=2)),
+                               np.asarray(demand), rtol=2e-3)
+
+
+def test_routed_latency_prices_paths_not_the_mean():
+    """On the shifted env a nearby path must be cheaper than a cross-country
+    one, and the unrouted latency is the uniform-source mean of the routed."""
+    tau = 18
+    ar = E.project_feasible(SLA_ENV, jnp.full((10, 4), 0.25), tau)
+    lat3 = E.latency_ms_routed(SLA_ENV, ar, tau)   # (S, I, D)
+    lat2 = E.latency_ms(SLA_ENV, ar, tau)          # (I, D) fleet-mean access
+    np.testing.assert_allclose(np.asarray(lat3.mean(axis=0)),
+                               np.asarray(lat2), rtol=1e-5)
+    # serving NY-origin traffic in NY (s=0, d=0) beats hauling it to SF (d=1)
+    assert float(lat3[0, 0, 0]) < float(lat3[0, 0, 1])
+
+
+# (routed Σ-estimator == simulator reconciliation lives with the other
+# estimator identities: test_consistency.test_routed_sla_estimator_...)
+
+
+# ---------------------------------------------------------------------------
+# degenerate S = 1 parity: engines
+# ---------------------------------------------------------------------------
+
+TOTAL_KEYS = ("carbon_kg", "cost_usd", "sla_miss_cost_usd", "violation")
+
+
+@pytest.mark.parametrize("engine", ["scan", "loop"])
+def test_day_engines_routed_s1_match_unrouted_bitwise(engine):
+    kw = dict(seed=0, hours=6, cfg_override=FD_CFG, engine=engine)
+    un = SCH.run_day(AGG, "fd", "cost_sla", **kw)
+    ro = SCH.run_day(AGG, "fd", "cost_sla", routed=True, **kw)
+    for k in TOTAL_KEYS:
+        _exact(un["totals"][k], ro["totals"][k], (engine, k))
+    for a, b in zip(un["per_epoch"], ro["per_epoch"]):
+        _exact(a["latency_ms"], b["latency_ms"], (engine, "latency_ms"))
+
+
+def test_nash_scan_routed_s1_matches_unrouted_bitwise():
+    kw = dict(seed=0, hours=4, cfg_override=NASH_CFG)
+    un = SCH.run_day(AGG, "nash", "cost_sla", **kw)
+    ro = SCH.run_day(AGG, "nash", "cost_sla", routed=True, **kw)
+    for k in TOTAL_KEYS:
+        _exact(un["totals"][k], ro["totals"][k], k)
+
+
+def test_month_routed_s1_matches_unrouted_bitwise():
+    kw = dict(days=2, hours=4, cfg_override=FD_CFG)
+    un = SCH.run_month(AGG, "fd", "cost_sla", **kw)
+    ro = SCH.run_month(AGG, "fd", "cost_sla", routed=True, **kw)
+    for k in TOTAL_KEYS:
+        np.testing.assert_array_equal(un["day_totals"][k], ro["day_totals"][k])
+    np.testing.assert_array_equal(un["peak_w"], ro["peak_w"])
+
+
+def test_batched_routed_s1_matches_unrouted_bitwise():
+    envs = [AGG, E.aggregate_origin(S.make("flash_crowd")(SLA_ENV))]
+    kw = dict(hours=4, cfg_override=FD_CFG, seeds=[0, 1])
+    un = SCH.run_days_batched(envs, "fd", "cost_sla", **kw)
+    ro = SCH.run_days_batched(envs, "fd", "cost_sla", routed=True, **kw)
+    for k in TOTAL_KEYS:
+        np.testing.assert_array_equal(un["totals"][k], ro["totals"][k])
+
+
+def test_compare_techniques_routed_s1_matches_unrouted():
+    kw = dict(objective="cost_sla", hours=3, seed0=0,
+              cfg_overrides={"fd": FD_CFG})
+    un = SCH.compare_techniques([AGG], ("fd",), **kw)
+    ro = SCH.compare_techniques([AGG], ("fd",), routed=True, **kw)
+    _exact(un["fd"]["mean"], ro["fd"]["mean"])
+
+
+# ---------------------------------------------------------------------------
+# degenerate S = 1 parity: every solver's epoch solve
+# ---------------------------------------------------------------------------
+
+def _solver_fractions(technique, ctx, cfg):
+    if technique == "gt-drl":
+        agents = gt_drl.init_agents(KEY, ctx.env, cfg, ctx.routed)
+        _, res = gt_drl.solve_epoch(KEY, agents, ctx, PEAK, cfg)
+        return res.fractions
+    mod, _ = SCH._MODS[technique]
+    return mod.solve_epoch(KEY, ctx, PEAK, cfg=cfg).fractions
+
+
+@pytest.mark.parametrize("technique,cfg", [
+    ("fd", FD_CFG),
+    ("nash", NASH_CFG),
+    ("ga", dataclasses.replace(SCH._MODS["ga"][1], generations=30)),
+    ("ddpg", dataclasses.replace(SCH._MODS["ddpg"][1], steps=40)),
+    ("ppo", SCH._MODS["ppo"][1].__class__(
+        ppo=PPOConfig(horizon=4, episodes=16, iters=2, update_epochs=2))),
+    ("gt-drl", FAST_GTDRL),
+])
+def test_solver_routed_s1_fractions_match_unrouted_bitwise(technique, cfg):
+    """With the S = 1 aggregate origin there is nothing to route, so every
+    technique's routed solve IS the unrouted program (GameContext.is_routed
+    normalizes the degenerate axis away): identical shape, identical bits."""
+    tau = jnp.int32(18)
+    un = _solver_fractions(technique, GameContext(
+        env=AGG, tau=tau, objective="cost_sla"), cfg)
+    ro = _solver_fractions(technique, GameContext(
+        env=AGG, tau=tau, objective="cost_sla", routed=True), cfg)
+    assert ro.shape == un.shape
+    np.testing.assert_array_equal(np.asarray(ro), np.asarray(un))
+
+
+def test_env_layer_generic_s1_path_is_bitwise():
+    """The generic (1, I, D) routed math itself — not just the normalized
+    program — reproduces the unrouted bills bit-for-bit: per-path pricing
+    over a single aggregate source at the mean RTT is the PR 3 model."""
+    tau = 18
+    key = jax.random.PRNGKey(9)
+    f = jax.random.uniform(key, (10, 4), minval=0.05, maxval=1.0)
+    f = f / f.sum(axis=1, keepdims=True)
+    ar = E.project_feasible(AGG, f, tau)
+    ar3 = E.project_feasible_routed(AGG, f[None], tau)
+    np.testing.assert_array_equal(np.asarray(ar3[0]), np.asarray(ar))
+    _, m2 = E.step_epoch(AGG, PEAK, ar, tau)
+    _, m3 = E.step_epoch(AGG, PEAK, ar3, tau)
+    for k in m2:
+        _exact(float(m2[k]), float(m3[k]), k)
+    np.testing.assert_array_equal(
+        np.asarray(E.player_reward(AGG, ar, tau, PEAK, "cost_sla")),
+        np.asarray(E.player_reward(AGG, ar3, tau, PEAK, "cost_sla")))
+
+
+# ---------------------------------------------------------------------------
+# routing as a decision surface: beating the source-blind split
+# ---------------------------------------------------------------------------
+
+def test_routed_fd_beats_source_blind_on_shifted_origins():
+    """With origins massed on NY and the WAN degraded, optimizing the
+    (S, I, D) tensor must cut the SLA bill vs broadcasting the unrouted
+    (I, D) split to every source (the PR 3 decision surface priced under
+    the routed simulator)."""
+    tau = jnp.int32(18)
+    ctx_r = GameContext(env=SHIFTED, tau=tau, objective="cost_sla", routed=True)
+    ctx_u = GameContext(env=SHIFTED, tau=tau, objective="cost_sla")
+    from repro.core import force_directed as FD
+    routed = FD.solve_epoch(KEY, ctx_r, PEAK, cfg=FDConfig(iters=120)).fractions
+    blind2 = FD.solve_epoch(KEY, ctx_u, PEAK, cfg=FDConfig(iters=120)).fractions
+    blind = jnp.broadcast_to(blind2, (4,) + blind2.shape)
+    sla_routed = float(jnp.sum(E.sla_cost_routed(
+        SHIFTED, fractions_to_ar(ctx_r, routed), tau)))
+    sla_blind = float(jnp.sum(E.sla_cost_routed(
+        SHIFTED, fractions_to_ar(ctx_r, blind), tau)))
+    assert sla_routed < 0.9 * sla_blind, (sla_routed, sla_blind)
+    # and the routed objective (cost + SLA) improves too, not just latency
+    from repro.core.game import cloud_objective
+    assert float(cloud_objective(ctx_r, routed, PEAK)) < float(
+        cloud_objective(ctx_r, blind, PEAK))
+
+
+def test_routing_suite_builds_and_runs_batched():
+    rows = S.build_suite("routing", ENV)
+    names = [n for n, _ in rows]
+    assert "east-business-day" in names and "uniform-origin" in names
+    envs = [e for _, e in rows]
+    res = SCH.run_days_batched(envs, "fd", "cost_sla", hours=3,
+                               cfg_override=FD_CFG, routed=True)
+    assert res["totals"]["cost_usd"].shape == (len(rows),)
+    assert np.all(np.isfinite(res["totals"]["cost_usd"]))
+    assert np.all(res["totals"]["sla_miss_cost_usd"] > 0)
+
+
+def test_origin_transforms_keep_origin_normalized():
+    for env in (S.make("origin_shift", toward=[1, 3], weight=0.6,
+                       start=4, duration=8)(ENV),
+                S.make("flash_crowd", sources=[2])(ENV),
+                S.make("flash_crowd", sources=[0, 1], tasks=[3])(ENV),
+                # a regional *dip* must clamp, not drain a source negative
+                S.make("flash_crowd", magnitude=0.5, sources=[0])(ENV)):
+        o = np.asarray(env.origin)
+        assert o.shape == np.asarray(ENV.origin).shape
+        assert o.min() >= 0.0
+        np.testing.assert_allclose(o.sum(axis=0), 1.0, rtol=1e-6)
+
+
+def test_gtdrl_routed_env_state_mode_runs():
+    """state_mode='env' gains the origin-weighted RTT feature when routed."""
+    cfg = dataclasses.replace(FAST_GTDRL, state_mode="env")
+    d = E.num_dcs(SHIFTED)
+    assert gt_drl.state_dim(SHIFTED, "env", routed=True) == 4 * d + 6 * d
+    assert gt_drl.state_dim(SHIFTED, "env", routed=False) == d + 5 * d
+    ctx = GameContext(env=SHIFTED, tau=jnp.int32(12), objective="cost_sla",
+                      routed=True)
+    agents = gt_drl.init_agents(KEY, SHIFTED, cfg, routed=True)
+    _, res = gt_drl.solve_epoch(KEY, agents, ctx, PEAK, cfg)
+    assert res.fractions.shape == (4, 10, 4)
+    assert bool(jnp.all(jnp.isfinite(res.fractions)))

@@ -136,6 +136,24 @@ def test_arrival_patterns_shape_and_positive(kind):
     assert np.all(car > 0)
 
 
+def test_bursty_spikes_never_overlap_multiply():
+    """Seeded spike windows are disjoint: every spiked hour carries exactly
+    one 2–3.3× magnitude over the 0.30 base (overlapping draws used to
+    multiply into the cap and flatten the documented burst), and the
+    capacity cap never binds."""
+    base = workload.base_rates(np.asarray(ENV.er).sum(axis=1))
+    for seed in range(30):
+        car = workload.arrival_pattern("bursty", base, seed=seed,
+                                       resample=False)
+        shape = car[0] / base[0]  # the shared 24-h shape
+        spiked = shape[shape > 0.30 + 1e-9]
+        assert len(spiked) >= 2, seed  # at least two spike hours landed
+        assert np.all(spiked >= 0.30 * 2.0 - 1e-6), (seed, spiked)
+        assert np.all(spiked <= 0.30 * 3.3 + 1e-6), (seed, spiked)  # < cap
+        base_hours = shape[shape <= 0.30 + 1e-9]
+        np.testing.assert_allclose(base_hours, 0.30)
+
+
 def test_build_env_routes_through_base_rates():
     """build_env's arrival construction == workload.base_rates + pattern."""
     env = E.build_env(4, seed=5, pattern="weekday")

@@ -2,7 +2,7 @@
 PY ?= python
 export PYTHONPATH := src$(if $(PYTHONPATH),:$(PYTHONPATH))
 
-.PHONY: check bench bench-quick bench-scenarios bench-smoke
+.PHONY: check bench bench-quick bench-scenarios bench-smoke sweep-smoke
 
 check:
 	$(PY) -m pytest -x -q
@@ -21,3 +21,9 @@ bench-scenarios:
 # so the per-source axis' overhead is tracked from PR 4 onward)
 bench-smoke:
 	REPRO_BENCH_QUICK=1 $(PY) -m benchmarks.run --only scenarios,engine --json BENCH_engine.json
+
+# severity-sweep smoke: the declarative ExperimentSpec sweep API end to end
+# (2x2 wan_degradation x origin_shift grid, routed fd vs a source-blind
+# technique registered through the public register_technique hook)
+sweep-smoke:
+	$(PY) examples/run_sweep.py --quick

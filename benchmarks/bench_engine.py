@@ -15,6 +15,13 @@ Rows (name, us_per_call, derived):
   engine/day_scan_routed      us per compiled day over the (S, I, D) routing
                               tensor (overhead vs the unrouted SLA day
                               derived — the cost of the per-source axis)
+  engine/day_batched_sharded  us per batched fleet evaluation through the
+                              shard_map-sharded env axis (overhead vs the
+                              plain vmapped engine derived; on one device
+                              the two run the identical program)
+  engine/sweep_grid           us per severity-sweep grid (ExperimentSpec
+                              ``sweep``: stacked grid envs, one batched
+                              compile per technique)
 """
 from __future__ import annotations
 
@@ -120,3 +127,35 @@ def run(rows):
          f"hours={HOURS};sources={E.num_sources(route_env)};"
          f"sla_usd={res_r['totals']['sla_miss_cost_usd']:.0f};"
          f"overhead_vs_unrouted={tm.seconds / max(day_s['cost_sla'], 1e-9):.2f}x")
+
+    # -- spec-driven engines: device-sharded batched day + severity sweep ----
+    from repro.core import experiment as X
+    spec = X.ExperimentSpec(technique="fd", objective="carbon", engine="batched",
+                            hours=HOURS, cfg=CFGS["fd"])
+    env_b = E.stack_envs(envs)
+    X.run(spec, env_b)  # warm (shares the spec-keyed cache with compare above)
+    with Timer() as tm:
+        X.run(spec, env_b)
+    plain_s = tm.seconds
+    X.run(spec, env_b, shard=True)  # warm the shard_map compile
+    with Timer() as tm:
+        res_sh = X.run(spec, env_b, shard=True)
+    emit(rows, "engine/day_batched_sharded", tm.seconds,
+         f"devices={jax.device_count()};envs={n};"
+         f"overhead_vs_vmap={tm.seconds / max(plain_s, 1e-9):.2f}x;"
+         f"mean={res_sh['totals']['carbon_kg'].mean():.0f}")
+
+    grid = {"wan_degradation": (1.0, 3.0), "origin_shift": (0.0, 0.7)}
+    sweep_spec = X.ExperimentSpec(technique="fd", objective="cost_sla",
+                                  engine="batched", routed=True, hours=HOURS,
+                                  cfg=CFGS["fd"])
+    base = (S.Scenario("sla_tighten", {"tighten": 0.7}),)
+    skw = dict(base_env=env, base_scenarios=base)
+    X.sweep(sweep_spec, grid, **skw)  # warm
+    with Timer() as tm:
+        res_g = X.sweep(sweep_spec, grid, **skw)
+    n_pts = len(res_g["labels"])
+    emit(rows, "engine/sweep_grid", tm.seconds,
+         f"points={n_pts};hours={HOURS};"
+         f"us_per_point={tm.seconds * 1e6 / n_pts:.0f};"
+         f"sla_usd_max={res_g['results']['fd']['totals']['sla_miss_cost_usd'].max():.0f}")

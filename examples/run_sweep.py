@@ -1,0 +1,110 @@
+"""Severity sweeps through the declarative ExperimentSpec API.
+
+One ``sweep`` call expands a wan_degradation × origin_shift grid into a
+stacked env batch and runs each technique through ONE batched compile over
+every grid point. To produce the routed-vs-source-blind degradation curves,
+a second technique — ``fd-blind``, registered here via the public
+``register_technique`` hook — solves the source-*blind* (I, D) game each
+epoch and broadcasts its split to every source region, so both curves are
+priced by the same routed simulator. As the WAN degrades and demand origins
+shift east, the source-blind SLA bill blows up while the routed scheduler
+keeps requests near their origins.
+
+    PYTHONPATH=src python examples/run_sweep.py
+    PYTHONPATH=src python examples/run_sweep.py --hours 12 --factors 1,2,4,8
+    PYTHONPATH=src python examples/run_sweep.py --quick      # smoke grid
+"""
+import sys, os
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+import argparse
+import time
+
+import jax.numpy as jnp
+
+from repro import scenarios as S
+from repro.core import ExperimentSpec, register_technique, sweep
+from repro.core.force_directed import FDConfig, solve_epoch as fd_solve
+from repro.core.game import GameContext, SolveResult
+from repro.dcsim import env as E
+
+
+# both techniques run the SAME solver budget — the curves compare routing
+# surfaces, not iteration counts
+FD_CFG = FDConfig(iters=60)
+
+
+def blind_solve(key, ctx, peak_state, cfg=FD_CFG):
+    """Source-blind FD: solve the aggregate (I, D) game — one source, mean
+    RTT, exactly the PR 3 decision surface — then broadcast the split to
+    every source region. The routed engine prices the result per
+    (source, task) path, so the comparison against routed FD is fair."""
+    agg = GameContext(env=E.aggregate_origin(ctx.env), tau=ctx.tau,
+                      objective=ctx.objective, routed=False)
+    res = fd_solve(key, agg, peak_state, cfg=cfg)
+    fr = jnp.broadcast_to(res.fractions,
+                          (ctx.num_sources(),) + res.fractions.shape)
+    return SolveResult(fr, res.info)
+
+
+register_technique("fd-blind", blind_solve, default_cfg=FD_CFG)
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--dcs", type=int, default=4, choices=(4, 8, 16))
+    ap.add_argument("--hours", type=int, default=24)
+    ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--factors", default="1,2,4",
+                    help="wan_degradation RTT factors (grid axis 1)")
+    ap.add_argument("--weights", default="0.0,0.4,0.8",
+                    help="origin_shift east-shift weights (grid axis 2)")
+    ap.add_argument("--quick", action="store_true",
+                    help="2x2 grid, 6 hours (the `make sweep-smoke` setting)")
+    args = ap.parse_args()
+    if args.quick:
+        args.hours, args.factors, args.weights = 6, "1,3", "0.0,0.8"
+
+    factors = tuple(float(x) for x in args.factors.split(","))
+    weights = tuple(float(x) for x in args.weights.split(","))
+    grid = {"wan_degradation": factors,
+            "origin_shift": tuple({"weight": w, "toward": (0,)}
+                                  for w in weights)}
+    base = (S.Scenario("sla_tighten", {"tighten": 0.7}),)
+    spec = ExperimentSpec(technique="fd", objective="cost_sla",
+                          engine="batched", routed=True, hours=args.hours,
+                          seed=args.seed, cfg=FD_CFG)
+
+    env = E.build_env(args.dcs, seed=args.seed)
+    n_pts = len(factors) * len(weights)
+    print(f"sweep: wan_degradation{factors} x origin_shift{weights} "
+          f"-> {n_pts} scenario-days, objective=cost_sla routed=True\n")
+
+    t0 = time.time()
+    res = sweep(spec, grid, base_env=env, techniques=("fd", "fd-blind"),
+                base_scenarios=base)
+    wall = time.time() - t0
+
+    sla = {t: res["results"][t]["totals"]["sla_miss_cost_usd"]
+           for t in ("fd", "fd-blind")}
+    cost = {t: res["results"][t]["totals"]["cost_usd"]
+            for t in ("fd", "fd-blind")}
+    print(f"{'grid point':42s} {'blind_sla$':>12s} {'routed_sla$':>12s} "
+          f"{'cut%':>7s} {'routed_cost$':>13s}")
+    for p, lbl in enumerate(res["labels"]):
+        b, r = sla["fd-blind"][p], sla["fd"][p]
+        cut = 100.0 * (b - r) / max(abs(b), 1e-9)
+        print(f"{lbl:42s} {b:12.1f} {r:12.1f} {cut:6.1f}% {cost['fd'][p]:13.1f}")
+
+    # the headline: at the harshest grid point the routed scheduler must
+    # beat the source-blind baseline on the SLA bill (it sees origins)
+    b, r = sla["fd-blind"][-1], sla["fd"][-1]
+    assert r < b, "routed fd must cut the SLA bill at the harshest point"
+    print(f"\n{n_pts} grid points x 2 techniques in {wall:.1f}s "
+          f"(one batched compile each); at "
+          f"{res['labels'][-1]}: routed fd cuts the SLA bill "
+          f"{100.0 * (b - r) / b:.0f}% vs the source-blind split.")
+
+
+if __name__ == "__main__":
+    main()

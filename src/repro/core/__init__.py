@@ -1,3 +1,27 @@
-# The paper's primary contribution — implement the SYSTEM here
-# (scheduler, optimizer, data path, serving loop, etc.) in the
-# host framework. Add sibling subpackages for substrates.
+"""Public API of the evaluation system (the paper's primary contribution).
+
+The documented import path::
+
+    from repro.core import ExperimentSpec, run, sweep, compare_techniques
+
+``ExperimentSpec`` declares one evaluation (technique, objective, engine,
+routed, hours/days, seeds, solver cfg, pretrain); ``run(spec, envs)`` drives
+it through the spec-keyed compile cache (``shard=True`` device-shards the
+batched engine); ``sweep(spec, grid)`` expands severity grids into per-point
+curves; ``compare_techniques`` is the paper's table protocol. External
+solvers plug in via ``register_technique`` and appear everywhere by name.
+"""
+from .experiment import ENGINES, ExperimentSpec, run, sweep
+from .game import (GameContext, SolveResult, TechniqueDef, get_technique,
+                   register_technique, technique_names,
+                   unregister_technique)
+from .schedulers import (TECHNIQUES, compare_techniques, get_scheduler,
+                         run_day, run_days_batched, run_month)
+
+__all__ = [
+    "ENGINES", "ExperimentSpec", "run", "sweep",
+    "GameContext", "SolveResult", "TechniqueDef", "get_technique",
+    "register_technique", "technique_names", "unregister_technique",
+    "TECHNIQUES", "compare_techniques", "get_scheduler",
+    "run_day", "run_days_batched", "run_month",
+]

@@ -1,0 +1,474 @@
+"""``ExperimentSpec``: the one declarative front door to every engine.
+
+After three engine PRs the evaluation surface had five entry points
+(``run_day``, ``run_day_scan``, ``run_days_batched``, ``run_month``,
+``compare_techniques``) that each re-threaded the same ten kwargs and each
+maintained their own ``functools.lru_cache`` compile path. This module
+replaces that with:
+
+- ``ExperimentSpec`` — a frozen, hashable description of one evaluation
+  (technique, objective, engine, routed, hours/days, seeds, solver cfg,
+  pretrain). Its *static* fields — the ones that change the compiled
+  program — key a single module-level compile cache, so the scan, batched,
+  sharded and month engines all share compiled artifacts no matter which
+  call site (or legacy shim) asks for them.
+- ``run(spec, envs)`` — the façade. ``spec.engine`` selects the day scan,
+  the hour-loop reference, the vmapped fleet engine or the month scan;
+  ``shard=True`` additionally shards the batched engine's env axis across
+  devices via ``shard_map`` (single-device results are identical, and the
+  default ``shard=False`` path is byte-for-byte the PR 2–4 program).
+- ``sweep(spec, grid)`` — severity sweeps: a cartesian grid of scenario-
+  transform parameters (``wan_degradation`` factors, ``origin_shift``
+  weights, ``sla_tighten`` …) expands into one stacked env batch, every
+  technique runs through ONE batched compile, and the result is structured
+  per-grid-point curves — the routed-vs-source-blind degradation plots come
+  out of a single call.
+
+The legacy entry points in ``repro.core.schedulers`` are kept as thin shims
+over the spec and remain pinned bit-for-bit against their PR 2–4 outputs;
+new code should ``from repro.core import ExperimentSpec, run, sweep``.
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Any, Callable, Dict, List, Mapping, Optional, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from ..dcsim import env as E
+from . import game
+from . import schedulers as SCH
+from .game import GameContext, fractions_to_ar
+
+_TOTAL_KEYS = ("carbon_kg", "cost_usd", "sla_miss_cost_usd", "violation")
+
+ENGINES = ("scan", "loop", "batched", "month")
+
+
+# ---------------------------------------------------------------------------
+# the spec
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass(frozen=True)
+class ExperimentSpec:
+    """One evaluation, declaratively. Frozen and hashable: the static fields
+    (``technique``, ``objective``, ``hours``, ``cfg``, ``routed``) key the
+    module compile cache; the rest (seeds, days, pretrain) only select
+    runtime inputs.
+
+    ``engine``: ``"scan"`` — one env, one jitted day; ``"loop"`` — the
+    Python hour-loop parity reference; ``"batched"`` — a fleet of
+    scenario-days in one vmapped compile (optionally device-sharded);
+    ``"month"`` — a second-level scan threading the monthly peak across
+    days. ``seeds`` (batched) / ``seed`` (everything else) reproduce the
+    legacy entry points' RNG discipline exactly.
+    """
+    technique: str = "fd"
+    objective: str = "carbon"
+    engine: str = "scan"
+    routed: bool = False
+    hours: int = 24
+    days: Optional[int] = None            # month engine: env repeat count
+    seed: int = 0
+    seeds: Optional[Tuple[int, ...]] = None  # batched engine: one per env
+    pretrain: bool = True
+    cfg: Any = None                       # solver config (frozen dataclass)
+
+    def __post_init__(self):
+        if self.engine not in ENGINES:
+            raise ValueError(
+                f"unknown engine {self.engine!r}; known: {ENGINES}")
+        if self.objective not in E.OBJECTIVES:
+            raise ValueError(f"unknown objective {self.objective!r}; "
+                             f"known: {E.OBJECTIVES}")
+        if self.seeds is not None and not isinstance(self.seeds, tuple):
+            object.__setattr__(self, "seeds", tuple(self.seeds))
+
+    def replace(self, **changes) -> "ExperimentSpec":
+        return dataclasses.replace(self, **changes)
+
+    def static_key(self) -> Tuple[str, str, int, Any, bool]:
+        """The compile-relevant fields, in ``_day_core`` argument order."""
+        return (self.technique, self.objective, self.hours, self.cfg,
+                self.routed)
+
+
+# ---------------------------------------------------------------------------
+# engine cores (pure, jit/vmap/scan-friendly)
+# ---------------------------------------------------------------------------
+
+def _solver_step(technique: str, cfg) -> Callable:
+    """step(key, state, ctx, peak) -> (state, SolveResult) from the registry;
+    state threads the scan carry (per-player agents for gt-drl, () for
+    stateless solvers)."""
+    t = game.get_technique(technique)
+    cfg = t.resolve_cfg(cfg)
+    step = t.step
+
+    def bound(key, state, ctx, peak):
+        return step(key, state, ctx, peak, cfg)
+    return bound
+
+
+@functools.lru_cache(maxsize=None)
+def _day_core(technique: str, objective: str, hours: int, cfg,
+              routed: bool = False) -> Callable:
+    """day(env, key, peak0, state0) -> (peak, state, metrics (hours,)-dict).
+
+    Pure and jit/vmap-friendly; the RNG key is split exactly as the
+    reference loop does, so both engines see the same per-epoch keys.
+    ``routed`` plays the (S, I, D) routing game instead of the (I, D) one.
+    """
+    step = _solver_step(technique, cfg)
+
+    def day(env: E.EnvParams, key, peak0, state0):
+        def body(carry, tau):
+            key, peak, state = carry
+            key, ks = jax.random.split(key)
+            ctx = GameContext(env=env, tau=tau, objective=objective,
+                              routed=routed)
+            state, res = step(ks, state, ctx, peak)
+            ar = fractions_to_ar(ctx, res.fractions)
+            peak, m = E.step_epoch(env, peak, ar, tau)
+            return (key, peak, state), m
+
+        (_, peak, state), ms = jax.lax.scan(
+            body, (key, peak0, state0), jnp.arange(hours, dtype=jnp.int32))
+        return peak, state, ms
+
+    return day
+
+
+def _sharded_batch(core: Callable) -> Callable:
+    """Shard the batched day engine's env axis across all local devices.
+
+    ``shard_map`` over a 1-axis device mesh: env rows and their RNG keys
+    split by shard, (peak0, state0) replicated — each device runs the
+    plain vmapped day core on its slice, so a 1-device mesh runs the
+    EXACT unsharded program and N devices evaluate N env shards in
+    parallel with zero cross-device collectives.
+    """
+    from jax.experimental.shard_map import shard_map
+    from jax.sharding import Mesh, PartitionSpec as P
+
+    mesh = Mesh(np.asarray(jax.devices()), ("env",))
+    batched = jax.vmap(core, in_axes=(0, 0, None, None))
+    fn = shard_map(batched, mesh=mesh,
+                   in_specs=(P("env"), P("env"), P(), P()),
+                   out_specs=(P("env"), P("env"), P("env")),
+                   check_rep=False)
+    return jax.jit(fn)
+
+
+_KINDS = ("day", "batched", "sharded", "month")
+
+
+@functools.lru_cache(maxsize=None)
+def _compiled(kind: str, technique: str, objective: str, hours: int, cfg,
+              routed: bool) -> Callable:
+    """THE compile cache: one jitted artifact per (engine kind, spec static
+    fields), shared by ``run``/``sweep`` and every legacy shim — no engine
+    compiles per call site anymore."""
+    core = _day_core(technique, objective, hours, cfg, routed)
+    if kind == "day":
+        return jax.jit(core)
+    if kind == "batched":
+        return jax.jit(jax.vmap(core, in_axes=(0, 0, None, None)))
+    if kind == "sharded":
+        return _sharded_batch(core)
+    if kind == "month":
+        def month(env_days, keys, peak0, state0):
+            def body(carry, x):
+                peak, state = carry
+                env, key = x
+                peak, state, ms = core(env, key, peak, state)
+                return (peak, state), (ms, peak)
+
+            (peak, state), (ms, peaks) = jax.lax.scan(
+                body, (peak0, state0), (env_days, keys))
+            return peak, state, ms, peaks
+
+        return jax.jit(month)
+    raise ValueError(f"unknown engine kind {kind!r}; known: {_KINDS}")
+
+
+def compiled_engine(spec: ExperimentSpec, *, shard: bool = False) -> Callable:
+    """The spec's compiled engine (public access to the cache)."""
+    kind = {"scan": "day", "batched": "sharded" if shard else "batched",
+            "month": "month"}.get(spec.engine)
+    if kind is None:
+        raise ValueError(f"engine {spec.engine!r} is not compiled")
+    return _compiled(kind, *spec.static_key())
+
+
+def _clear_compile_caches() -> None:
+    _day_core.cache_clear()
+    _compiled.cache_clear()
+
+
+# re-registering a technique name must not serve stale compiled engines
+game.on_technique_change(_clear_compile_caches)
+
+
+# ---------------------------------------------------------------------------
+# runtime inputs + result formatting (the legacy entry points' exact shapes)
+# ---------------------------------------------------------------------------
+
+def _day_inputs(env, technique, objective, seed, pretrain, cfg,
+                solver_state0=None, routed: bool = False):
+    """Replicates the reference loop's key discipline + initial solver state.
+
+    An injected ``solver_state0`` short-circuits state construction (no
+    throwaway pretrain/init work) while keeping the key discipline intact.
+    """
+    key = jax.random.PRNGKey(seed)
+    kp, key = jax.random.split(key)
+    if solver_state0 is not None:
+        return key, solver_state0
+    t = game.get_technique(technique)
+    return key, t.init_state(kp, env, objective, cfg, routed, pretrain)
+
+
+def _format_day(ms, hours: int, technique: str, objective: str) -> Dict[str, Any]:
+    """Stacked (hours,) metric arrays -> the run_day result dict."""
+    host = {k: np.asarray(v).astype(float).tolist() for k, v in ms.items()}
+    per_epoch = [{**{k: host[k][t] for k in host}, "tau": t} for t in range(hours)]
+    totals = {k: 0.0 for k in _TOTAL_KEYS}
+    for row in per_epoch:
+        for k in totals:
+            totals[k] += row[k]
+    return {"per_epoch": per_epoch, "totals": totals, "technique": technique,
+            "objective": objective}
+
+
+# ---------------------------------------------------------------------------
+# the façade
+# ---------------------------------------------------------------------------
+
+def run(
+    spec: ExperimentSpec,
+    envs,
+    *,
+    peak_state0: Optional[jnp.ndarray] = None,
+    solver_state0: Any = None,
+    solver: Optional[Callable] = None,
+    shard: bool = False,
+) -> Dict[str, Any]:
+    """Run one experiment. ``envs`` is a single EnvParams for the scan/loop
+    engines, one-or-many (list or stacked) for batched, and one/list/stacked
+    per-day rows for month.
+
+    ``solver_state0`` injects an initial solver carry (deployed GT-DRL
+    agents); ``solver`` injects a prebuilt stateful closure (loop engine
+    only); ``shard=True`` (batched only) shards the env axis across devices
+    via ``shard_map`` — identical results, the batch is padded to the device
+    count and the padded rows' metrics dropped.
+    """
+    if shard and spec.engine != "batched":
+        raise ValueError(f"shard=True needs engine='batched', "
+                         f"got {spec.engine!r}")
+    if solver is not None and spec.engine != "loop":
+        raise ValueError(f"a prebuilt solver closure needs engine='loop', "
+                         f"got {spec.engine!r}")
+    if peak_state0 is not None and spec.engine == "batched":
+        raise ValueError("the batched engine starts every scenario-day from "
+                         "a zero peak; peak_state0 is not supported")
+    if solver_state0 is not None and spec.engine == "loop":
+        raise ValueError("the loop engine derives solver state from the "
+                         "seed or a prebuilt solver=; solver_state0 is "
+                         "scan/batched/month-only")
+    game.get_technique(spec.technique)  # fail fast with the known-names list
+    if spec.engine == "scan":
+        return _run_scan(spec, envs, peak_state0, solver_state0)
+    if spec.engine == "loop":
+        return _run_loop(spec, envs, peak_state0, solver)
+    if spec.engine == "batched":
+        return _run_batched(spec, envs, solver_state0, shard)
+    return _run_month(spec, envs, peak_state0, solver_state0)
+
+
+def _run_scan(spec, env, peak_state0, solver_state0):
+    key, state0 = _day_inputs(env, spec.technique, spec.objective, spec.seed,
+                              spec.pretrain, spec.cfg, solver_state0,
+                              spec.routed)
+    peak0 = (peak_state0 if peak_state0 is not None
+             else jnp.zeros((E.num_dcs(env),)))
+    day = _compiled("day", *spec.static_key())
+    _, _, ms = day(env, key, peak0, state0)
+    return _format_day(ms, spec.hours, spec.technique, spec.objective)
+
+
+def _run_loop(spec, env, peak_state0, solver):
+    """The seed Python hour-loop, kept as the parity reference. Metrics
+    accumulate on-device and transfer with ONE ``jax.device_get``."""
+    key = jax.random.PRNGKey(spec.seed)
+    _, key = jax.random.split(key)
+    if solver is None:
+        if game.get_technique(spec.technique).stateful:
+            # the scan engine's exact init discipline (same kp, same
+            # pretrain flag), so loop-vs-scan parity holds for ANY
+            # registered stateful technique, not just gt-drl
+            _, state0 = _day_inputs(env, spec.technique, spec.objective,
+                                    spec.seed, spec.pretrain, spec.cfg,
+                                    None, spec.routed)
+            solver = SCH.StatefulScheduler(spec.technique, state0,
+                                           spec.cfg).solve_epoch
+        else:
+            solver = SCH.get_scheduler(
+                spec.technique, env, spec.objective, routed=spec.routed,
+                **({"cfg": spec.cfg} if spec.cfg is not None else {}),
+            )
+    d = E.num_dcs(env)
+    peak = peak_state0 if peak_state0 is not None else jnp.zeros((d,))
+    epoch_metrics: List[Dict[str, jnp.ndarray]] = []
+    for tau in range(spec.hours):
+        key, ks = jax.random.split(key)
+        ctx = GameContext(env=env, tau=jnp.int32(tau), objective=spec.objective,
+                          routed=spec.routed)
+        res = solver(ks, ctx, peak)
+        ar = fractions_to_ar(ctx, res.fractions)
+        peak, m = E.step_epoch(env, peak, ar, jnp.int32(tau))
+        epoch_metrics.append(m)  # stays on device; no per-epoch host sync
+    per_epoch: List[Dict[str, float]] = []
+    totals = {k: 0.0 for k in _TOTAL_KEYS}
+    for tau, m in enumerate(jax.device_get(epoch_metrics)):  # ONE transfer
+        row = {k: float(v) for k, v in m.items()}
+        row["tau"] = tau
+        per_epoch.append(row)
+        for k in totals:
+            totals[k] += row[k]
+    return {"per_epoch": per_epoch, "totals": totals,
+            "technique": spec.technique, "objective": spec.objective}
+
+
+def _run_batched(spec, envs, solver_state0, shard):
+    if isinstance(envs, E.EnvParams) and envs.er.ndim == 2:
+        envs = [envs]  # single env == batch of one (compare_techniques parity)
+    if isinstance(envs, E.EnvParams):
+        env_b, n = envs, int(envs.er.shape[0])
+        env0 = jax.tree_util.tree_map(lambda x: x[0], envs)
+    else:
+        envs = list(envs)
+        env_b, n = E.stack_envs(envs), len(envs)
+        env0 = envs[0]
+    seeds = list(range(n)) if spec.seeds is None else list(spec.seeds)
+    if len(seeds) != n:
+        raise ValueError(f"{len(seeds)} seeds for {n} scenario-days")
+
+    # per-day keys split exactly as run_day splits them; gt-drl pretrains
+    # ONCE on the first seed's pretrain key (deploy-once semantics)
+    keys = jnp.stack([jax.random.split(jax.random.PRNGKey(s))[1] for s in seeds])
+    _, state0 = _day_inputs(env0, spec.technique, spec.objective, seeds[0],
+                            spec.pretrain, spec.cfg, solver_state0, spec.routed)
+    peak0 = jnp.zeros((E.num_dcs(env0),))
+
+    if not shard:
+        batch = _compiled("batched", *spec.static_key())
+        _, _, ms = batch(env_b, keys, peak0, state0)
+    else:
+        pad = (-n) % jax.device_count()
+        if pad:
+            env_b = E.pad_env_batch(env_b, n + pad)
+            keys = jnp.concatenate(
+                [keys, jnp.broadcast_to(keys[-1:], (pad,) + keys.shape[1:])])
+        batch = _compiled("sharded", *spec.static_key())
+        _, _, ms = batch(env_b, keys, peak0, state0)
+        if pad:
+            ms = {k: v[:n] for k, v in ms.items()}
+    out = {k: np.asarray(v) for k, v in ms.items()}  # (n, hours) each
+    totals = {k: out[k].sum(axis=1) for k in _TOTAL_KEYS}
+    return {"totals": totals, "per_epoch": out, "technique": spec.technique,
+            "objective": spec.objective, "seeds": seeds}
+
+
+def _run_month(spec, envs, peak_state0, solver_state0):
+    days = spec.days
+    if isinstance(envs, E.EnvParams) and envs.er.ndim == 2:
+        n = 30 if days is None else int(days)
+        env0, env_days = envs, E.tile_env(envs, n)
+    elif isinstance(envs, E.EnvParams):
+        n = int(envs.er.shape[0])
+        env0 = jax.tree_util.tree_map(lambda x: x[0], envs)
+        env_days = envs
+    else:
+        envs = [e if isinstance(e, E.EnvParams) else e[1] for e in envs]
+        n, env0, env_days = len(envs), envs[0], E.stack_envs(envs)
+    if days is not None and int(days) != n:
+        raise ValueError(f"days={days} but {n} per-day envs were given")
+
+    keys = jnp.stack(
+        [jax.random.split(jax.random.PRNGKey(spec.seed + d))[1]
+         for d in range(n)])
+    _, state0 = _day_inputs(env0, spec.technique, spec.objective, spec.seed,
+                            spec.pretrain, spec.cfg, solver_state0, spec.routed)
+    peak0 = (peak_state0 if peak_state0 is not None
+             else jnp.zeros((E.num_dcs(env0),)))
+
+    month = _compiled("month", *spec.static_key())
+    final_peak, _, ms, peaks = month(env_days, keys, peak0, state0)
+    per_day = {k: np.asarray(v) for k, v in ms.items()}  # (n, hours) each
+    day_totals = {k: per_day[k].sum(axis=1) for k in _TOTAL_KEYS}
+    return {"per_day": per_day, "day_totals": day_totals,
+            "totals": {k: float(day_totals[k].sum()) for k in _TOTAL_KEYS},
+            "peak_w": np.asarray(peaks), "final_peak_w": np.asarray(final_peak),
+            "days": n, "technique": spec.technique,
+            "objective": spec.objective}
+
+
+# ---------------------------------------------------------------------------
+# severity sweeps: parameter grids -> stacked envs -> per-point curves
+# ---------------------------------------------------------------------------
+
+def sweep(
+    spec: ExperimentSpec,
+    grid: Mapping[str, Sequence[Any]],
+    *,
+    base_env: Optional[E.EnvParams] = None,
+    techniques: Optional[Sequence[str]] = None,
+    base_scenarios: Sequence[Any] = (),
+    cfg_overrides: Optional[Mapping[str, Any]] = None,
+    shard: bool = False,
+) -> Dict[str, Any]:
+    """Severity sweep: the cartesian ``grid`` of scenario-transform
+    parameters expands into one stacked env batch, and every technique runs
+    through ONE batched compile over all grid points.
+
+    ``grid`` maps a registered transform name to a sequence of points — a
+    params dict, or a bare scalar for the transform's declared severity knob
+    (``{"wan_degradation": (1.0, 2.0, 4.0), "origin_shift": (0.0, 0.8)}`` is
+    a 3 × 2 factor × weight grid). ``base_scenarios`` (Scenario specs or
+    transforms) apply to ``base_env`` before every grid point — e.g. an
+    ``sla_tighten`` row so misses are priced. Every point runs with
+    ``spec.seed``'s RNG stream, so severity is the only variable along a
+    curve. ``cfg_overrides`` maps technique -> solver config; ``spec.cfg``
+    covers ``spec.technique`` itself, other techniques default.
+
+    Returns ``{"points": [{name: params}], "labels": [...], "results":
+    {technique: {"totals": {k: (P,)}, "per_epoch": {k: (P, hours)}}}}`` —
+    each metric row is one grid point's curve (the routed-vs-source-blind
+    degradation plot is two techniques of one sweep).
+    """
+    from .. import scenarios as S
+
+    base_env = base_env if base_env is not None else E.build_env(4, seed=0)
+    points, rows = S.build_grid(base_env, grid, base=base_scenarios)
+    labels = [lbl for lbl, _ in rows]
+    env_b = E.stack_envs([env for _, env in rows])
+    n = len(rows)
+    techniques = tuple(techniques) if techniques else (spec.technique,)
+    overrides = dict(cfg_overrides or {})
+
+    results: Dict[str, Dict[str, Any]] = {}
+    for t in techniques:
+        cfg = overrides.get(t, spec.cfg if t == spec.technique else None)
+        pspec = spec.replace(technique=t, cfg=cfg, engine="batched",
+                             seeds=(spec.seed,) * n)
+        res = _run_batched(pspec, env_b, None, shard)
+        results[t] = {"totals": res["totals"], "per_epoch": res["per_epoch"]}
+    return {"grid": {name: list(pts) for name, pts in grid.items()},
+            "points": points, "labels": labels, "results": results,
+            "objective": spec.objective, "hours": spec.hours,
+            "routed": spec.routed, "techniques": list(techniques)}

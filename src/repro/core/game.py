@@ -21,7 +21,7 @@ and the Nash-residual diagnostic.
 from __future__ import annotations
 
 import dataclasses
-from typing import Callable, Dict, NamedTuple, Optional, Tuple
+from typing import Any, Callable, Dict, NamedTuple, Optional, Tuple
 
 import jax
 import jax.numpy as jnp
@@ -185,3 +185,107 @@ class SolveResult(NamedTuple):
 
 
 Scheduler = Callable[..., SolveResult]  # (ctx, peak_state, key) -> SolveResult
+
+
+# ---------------------------------------------------------------------------
+# technique registry: the ONE name -> solver lookup every engine shares
+# ---------------------------------------------------------------------------
+
+def _stateless_init(key, env, objective, cfg, routed: bool, pretrain: bool):
+    """Solver state for a stateless technique: the empty carry."""
+    return ()
+
+
+class TechniqueDef(NamedTuple):
+    """One registered technique, in the engines' common shape.
+
+    ``step(key, state, ctx, peak_state, cfg) -> (state, SolveResult)`` is
+    what the compiled engines scan (``state`` threads the carry — per-player
+    agents for gt-drl, ``()`` for stateless solvers);
+    ``init_state(key, env, objective, cfg, routed, pretrain)`` builds the
+    initial carry (the deploy-once snapshot for stateful techniques).
+    """
+    name: str
+    step: Callable[..., Tuple[Any, SolveResult]]
+    default_cfg: Any = None
+    init_state: Callable[..., Any] = _stateless_init
+    stateful: bool = False
+
+    def resolve_cfg(self, cfg: Any) -> Any:
+        """``cfg`` if given, else the registered default (the one rule every
+        registry consumer applies)."""
+        return cfg if cfg is not None else self.default_cfg
+
+
+_TECHNIQUES: Dict[str, TechniqueDef] = {}
+_REGISTRY_WATCHERS = []  # compile-cache clearers, run when a name is rebound
+
+
+def on_technique_change(fn: Callable[[], None]) -> None:
+    """Register a cache-clear hook run whenever a technique is re-registered
+    (``overwrite=True``): compiled engines keyed by technique *name* would
+    otherwise serve the stale solver."""
+    _REGISTRY_WATCHERS.append(fn)
+
+
+def register_technique(
+    name: str,
+    solve_epoch: Optional[Callable] = None,
+    *,
+    step: Optional[Callable] = None,
+    default_cfg: Any = None,
+    init_state: Optional[Callable] = None,
+    stateful: bool = False,
+    overwrite: bool = False,
+) -> TechniqueDef:
+    """Register a technique so every engine (and ``ExperimentSpec``) can
+    drive it by name — external solvers plug in without editing
+    ``schedulers.py``.
+
+    Pass exactly one of:
+
+    - ``solve_epoch(key, ctx, peak_state, cfg=...) -> SolveResult`` for a
+      stateless solver (the five paper baselines' shape), or
+    - ``step(key, state, ctx, peak_state, cfg) -> (state, SolveResult)`` for
+      a stateful one (gt-drl's shape) — with ``init_state`` building the
+      initial carry and ``stateful=True`` so ``compare_techniques`` deploys
+      one snapshot per technique (deploy-once protocol).
+    """
+    if (solve_epoch is None) == (step is None):
+        raise ValueError("pass exactly one of solve_epoch= or step=")
+    if solve_epoch is not None:
+        fn = solve_epoch
+
+        def step(key, state, ctx, peak_state, cfg):
+            return state, fn(key, ctx, peak_state, cfg=cfg)
+    if name in _TECHNIQUES:
+        if not overwrite:
+            raise KeyError(f"technique {name!r} already registered "
+                           "(overwrite=True rebinds and clears compile caches)")
+        for clear in _REGISTRY_WATCHERS:
+            clear()
+    t = TechniqueDef(name, step, default_cfg, init_state or _stateless_init,
+                     stateful)
+    _TECHNIQUES[name] = t
+    return t
+
+
+def unregister_technique(name: str) -> None:
+    """Remove a registered technique and clear the compiled-engine caches
+    (they are keyed by name — a later registration under the same name must
+    not serve the old solver's compiled program)."""
+    if _TECHNIQUES.pop(name, None) is not None:
+        for clear in _REGISTRY_WATCHERS:
+            clear()
+
+
+def get_technique(name: str) -> TechniqueDef:
+    try:
+        return _TECHNIQUES[name]
+    except KeyError:
+        raise KeyError(
+            f"unknown technique {name!r}; known: {technique_names()}") from None
+
+
+def technique_names() -> Tuple[str, ...]:
+    return tuple(_TECHNIQUES)

@@ -294,6 +294,23 @@ def solve_epoch(
     return agents, SolveResult(best_joint, {"round_values": vals, "best": best_val})
 
 
+def deploy(key, env: E.EnvParams, objective: str,
+           cfg: Optional[GTDRLConfig] = None, routed: bool = False,
+           pretrain_agents: bool = True) -> AgentState:
+    """The deploy-once snapshot the engines thread through their carries.
+
+    ``pretrain_agents=True`` runs offline pretraining on ``key`` (the paper's
+    protocol); ``False`` returns fresh agents from the fixed ``PRNGKey(0)``
+    init — exactly the two states the engines' key discipline has always
+    produced, now reachable by name so the technique registry (and
+    ``ExperimentSpec``) can build the carry without special-casing gt-drl.
+    """
+    cfg = cfg or GTDRLConfig()
+    if pretrain_agents:
+        return pretrain(key, env, objective, cfg, routed)
+    return init_agents(jax.random.PRNGKey(0), env, cfg, routed)
+
+
 # ---------------------------------------------------------------------------
 # offline pretraining (paper §6: random uniformly-sampled arrival rates)
 # ---------------------------------------------------------------------------

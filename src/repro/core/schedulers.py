@@ -1,29 +1,18 @@
-"""Unified scheduler registry + the compiled simulation engines.
+"""The builtin technique registrations + the legacy evaluation entry points.
 
-Every technique exposes ``solve_epoch(key, ctx, peak_state) -> SolveResult``;
-the engines drive any of them through the paper's experimental protocol:
-one-hour epochs, monthly peak-demand state threaded through, metrics from
-the *detailed* simulator (not the optimization estimate).
+Every technique exposes ``step(key, state, ctx, peak_state, cfg) ->
+(state, SolveResult)`` through the registry in ``repro.core.game``
+(``register_technique`` plugs external solvers in without editing this
+file); the engines drive any of them through the paper's experimental
+protocol: one-hour epochs, monthly peak-demand state threaded through,
+metrics from the *detailed* simulator (not the optimization estimate).
 
-Three engines share that protocol:
-
-- ``engine="scan"`` (default): a day is ONE jitted call — a ``lax.scan``
-  over epochs with (rng key, peak state, solver state) in the carry. Because
-  the day is a single pure function of ``(env, key, peak0, state0)``, it
-  vmaps across environments: ``run_days_batched`` evaluates a whole scenario
-  suite × seeds fleet (``repro.scenarios``) in one compile, and
-  ``compare_techniques`` (the paper's protocol, every table in §6) drives it
-  once per technique. GT-DRL agents thread through the scan carry, so the
-  deploy-once protocol needs no stateful Python closure.
-- ``engine="month"`` (``run_month``): a second-level ``lax.scan`` over days
-  threads the monthly peak state — and the GT-DRL agents — across a whole
-  month of scanned days, making the peak-demand charge (eq. 6) a real
-  planning signal instead of a per-day afterthought.
-- ``engine="loop"``: the seed Python hour-loop, kept as the parity
-  reference (used automatically when a prebuilt stateful ``solver`` closure
-  is passed). Metrics accumulate on-device and transfer with a single
-  ``jax.device_get`` at day end. All engines produce matching metrics for
-  the same technique/seed.
+The engines themselves — and the single spec-keyed compile cache they all
+share — live in ``repro.core.experiment``. The entry points below
+(``run_day``, ``run_day_scan``, ``run_days_batched``, ``run_month``) are
+kept as thin shims over ``ExperimentSpec`` for backward compatibility and
+remain pinned bit-for-bit against their pre-spec outputs; new code should
+use ``from repro.core import ExperimentSpec, run, sweep``.
 
 Every engine takes ``routed=True`` to play the per-source routing game:
 the action space grows to the (S, I, D) tensor, SLA misses are priced per
@@ -39,7 +28,7 @@ timings to a committed JSON trajectory (see ``benchmarks/bench_engine.py``).
 from __future__ import annotations
 
 import functools
-from typing import Any, Callable, Dict, List, Optional, Sequence, Tuple
+from typing import Any, Callable, Dict, Optional, Sequence
 
 import jax
 import jax.numpy as jnp
@@ -47,9 +36,10 @@ import numpy as np
 
 from ..dcsim import env as E
 from . import ddpg, force_directed, genetic, gt_drl, nash, ppo_joint
-from .game import GameContext, SolveResult, fractions_to_ar
+from . import game
+from .game import GameContext, SolveResult
 
-TECHNIQUES = ("fd", "ga", "nash", "ddpg", "ppo", "gt-drl")
+TECHNIQUES = ("fd", "ga", "nash", "ddpg", "ppo", "gt-drl")  # the paper's six
 
 _MODS = {"fd": (force_directed, force_directed.FDConfig()),
          "ga": (genetic, genetic.GAConfig()),
@@ -57,19 +47,48 @@ _MODS = {"fd": (force_directed, force_directed.FDConfig()),
          "ddpg": (ddpg, ddpg.DDPGConfig()),
          "ppo": (ppo_joint, ppo_joint.JointPPOConfig())}
 
-_TOTAL_KEYS = ("carbon_kg", "cost_usd", "sla_miss_cost_usd", "violation")
-
 stack_envs = E.stack_envs  # back-compat alias; the canonical home is dcsim.env
+
+# builtin registrations: the five stateless baselines + stateful gt-drl.
+# ``game.register_technique`` is the ONE lookup every engine now shares —
+# the old get_scheduler/_solver_step KeyError duplication is gone.
+for _name, (_mod, _cfg) in _MODS.items():
+    game.register_technique(_name, _mod.solve_epoch, default_cfg=_cfg)
+game.register_technique(
+    "gt-drl", step=gt_drl.solve_epoch, default_cfg=gt_drl.GTDRLConfig(),
+    init_state=lambda key, env, objective, cfg, routed, pretrain:
+        gt_drl.deploy(key, env, objective, cfg, routed, pretrain),
+    stateful=True)
 
 
 @functools.lru_cache(maxsize=None)
-def _gtdrl_solve(cfg: gt_drl.GTDRLConfig) -> Callable:
-    """One jitted gt-drl epoch solver per config (shared across instances)."""
-    return jax.jit(
-        lambda key, agents, ctx, peak: gt_drl.solve_epoch(key, agents, ctx, peak, cfg))
+def _stateful_solve(name: str, cfg) -> Callable:
+    """One jitted epoch solver per (technique, config), shared across
+    scheduler instances (gt-drl and any registered stateful technique)."""
+    t = game.get_technique(name)
+    cfg = t.resolve_cfg(cfg)
+    step = t.step
+    return jax.jit(lambda key, state, ctx, peak: step(key, state, ctx, peak, cfg))
 
 
-class GTDRLScheduler:
+# a re-registered name must not serve the stale jitted step
+game.on_technique_change(_stateful_solve.cache_clear)
+
+
+class StatefulScheduler:
+    """Stateful wrapper for the loop engine: holds the solver carry (e.g.
+    per-player agents) across epochs, advancing it each ``solve_epoch``."""
+
+    def __init__(self, name: str, state0, cfg=None):
+        self.state = state0
+        self._solve = _stateful_solve(name, cfg)
+
+    def solve_epoch(self, key, ctx: GameContext, peak_state) -> SolveResult:
+        self.state, res = self._solve(key, self.state, ctx, peak_state)
+        return res
+
+
+class GTDRLScheduler(StatefulScheduler):
     """Stateful wrapper: holds (pre)trained per-player agents across epochs.
 
     ``agents`` injects an existing deployed snapshot (deploy-once protocol);
@@ -78,157 +97,57 @@ class GTDRLScheduler:
 
     def __init__(self, env: E.EnvParams, objective: str, cfg: Optional[gt_drl.GTDRLConfig] = None,
                  pretrain_key=None, agents=None, routed: bool = False):
-        self.cfg = cfg or gt_drl.GTDRLConfig()
-        self.objective = objective
-        if agents is not None:
-            self.agents = agents
-        elif pretrain_key is not None:
-            self.agents = gt_drl.pretrain(pretrain_key, env, objective, self.cfg,
-                                          routed)
-        else:
-            self.agents = gt_drl.init_agents(jax.random.PRNGKey(0), env, self.cfg,
-                                             routed)
-        self._solve = _gtdrl_solve(self.cfg)
+        if agents is None:
+            agents = gt_drl.deploy(pretrain_key, env, objective, cfg, routed,
+                                   pretrain_agents=pretrain_key is not None)
+        super().__init__("gt-drl", agents, cfg)
 
-    def solve_epoch(self, key, ctx: GameContext, peak_state) -> SolveResult:
-        self.agents, res = self._solve(key, self.agents, ctx, peak_state)
-        return res
+    @property
+    def agents(self):
+        return self.state
+
+    @agents.setter
+    def agents(self, value):
+        self.state = value
 
 
 def get_scheduler(name: str, env: E.EnvParams, objective: str,
                   pretrain_key=None, routed: bool = False, **overrides) -> Callable:
     """Returns solve_epoch(key, ctx, peak_state) -> SolveResult, jitted so a
     24-epoch day compiles once (GameContext is a pytree; tau is traced).
-    ``routed`` sizes GT-DRL agents for the (S, I, D) routing game (the other
-    techniques read the joint-strategy shape off the ctx at solve time)."""
-    if name in _MODS:
-        mod, default_cfg = _MODS[name]
-        cfg = overrides.get("cfg", default_cfg)
-        return jax.jit(functools.partial(mod.solve_epoch, cfg=cfg))
-    if name == "gt-drl":
-        sched = GTDRLScheduler(env, objective, overrides.get("cfg"), pretrain_key,
-                               overrides.get("agents"), routed)
-        return sched.solve_epoch
-    raise KeyError(f"unknown technique {name!r}; known: {TECHNIQUES}")
+    ``routed`` sizes stateful solvers' carries for the (S, I, D) routing game
+    (the stateless techniques read the joint-strategy shape off the ctx at
+    solve time). Any technique registered via ``game.register_technique``
+    resolves here — unknown names raise with the known list."""
+    t = game.get_technique(name)
+    # identity check, not the name: a re-registered "gt-drl" must take the
+    # generic registry path below, with its own step/init_state
+    if t.step is gt_drl.solve_epoch:
+        return GTDRLScheduler(env, objective, overrides.get("cfg"), pretrain_key,
+                              overrides.get("agents"), routed).solve_epoch
+    cfg = t.resolve_cfg(overrides.get("cfg"))
+    if t.stateful:
+        state0 = overrides.get("state0")
+        if state0 is None:
+            state0 = t.init_state(
+                pretrain_key if pretrain_key is not None else jax.random.PRNGKey(0),
+                env, objective, cfg, routed, pretrain_key is not None)
+        return StatefulScheduler(name, state0, cfg).solve_epoch
+    step = t.step
+
+    def solve(key, ctx, peak_state):
+        return step(key, (), ctx, peak_state, cfg)[1]
+    return jax.jit(solve)
 
 
 # ---------------------------------------------------------------------------
-# compiled day engine: one lax.scan over epochs == one jitted call per day
+# legacy entry points: thin shims over ExperimentSpec (kept, deprecated)
 # ---------------------------------------------------------------------------
 
-def _solver_step(technique: str, cfg) -> Callable:
-    """step(key, state, ctx, peak) -> (state, SolveResult); state threads the
-    scan carry (per-player agents for gt-drl, () for stateless solvers)."""
-    if technique == "gt-drl":
-        cfg = cfg or gt_drl.GTDRLConfig()
-
-        def step(key, agents, ctx, peak):
-            return gt_drl.solve_epoch(key, agents, ctx, peak, cfg)
-        return step
-    if technique not in _MODS:
-        raise KeyError(f"unknown technique {technique!r}; known: {TECHNIQUES}")
-    mod, default_cfg = _MODS[technique]
-    cfg = cfg or default_cfg
-
-    def step(key, state, ctx, peak):
-        return state, mod.solve_epoch(key, ctx, peak, cfg=cfg)
-    return step
-
-
-@functools.lru_cache(maxsize=None)
-def _day_core(technique: str, objective: str, hours: int, cfg,
-              routed: bool = False) -> Callable:
-    """day(env, key, peak0, state0) -> (peak, state, metrics (hours,)-dict).
-
-    Pure and jit/vmap-friendly; the RNG key is split exactly as the
-    reference loop does, so both engines see the same per-epoch keys.
-    ``routed`` plays the (S, I, D) routing game instead of the (I, D) one.
-    """
-    step = _solver_step(technique, cfg)
-
-    def day(env: E.EnvParams, key, peak0, state0):
-        def body(carry, tau):
-            key, peak, state = carry
-            key, ks = jax.random.split(key)
-            ctx = GameContext(env=env, tau=tau, objective=objective,
-                              routed=routed)
-            state, res = step(ks, state, ctx, peak)
-            ar = fractions_to_ar(ctx, res.fractions)
-            peak, m = E.step_epoch(env, peak, ar, tau)
-            return (key, peak, state), m
-
-        (_, peak, state), ms = jax.lax.scan(
-            body, (key, peak0, state0), jnp.arange(hours, dtype=jnp.int32))
-        return peak, state, ms
-
-    return day
-
-
-@functools.lru_cache(maxsize=None)
-def _compiled_day(technique: str, objective: str, hours: int, cfg,
-                  routed: bool = False) -> Callable:
-    return jax.jit(_day_core(technique, objective, hours, cfg, routed))
-
-
-@functools.lru_cache(maxsize=None)
-def _compiled_batch(technique: str, objective: str, hours: int, cfg,
-                    routed: bool = False) -> Callable:
-    """One compile for a whole fleet: vmap the day core over (env, key)."""
-    core = _day_core(technique, objective, hours, cfg, routed)
-    return jax.jit(jax.vmap(core, in_axes=(0, 0, None, None)))
-
-
-@functools.lru_cache(maxsize=None)
-def _compiled_month(technique: str, objective: str, hours: int, cfg,
-                    routed: bool = False) -> Callable:
-    """month(env_days, keys, peak0, state0): scan the day core over days,
-    threading (peak, solver state) — the monthly-peak charge accumulates."""
-    day = _day_core(technique, objective, hours, cfg, routed)
-
-    def month(env_days, keys, peak0, state0):
-        def body(carry, x):
-            peak, state = carry
-            env, key = x
-            peak, state, ms = day(env, key, peak, state)
-            return (peak, state), (ms, peak)
-
-        (peak, state), (ms, peaks) = jax.lax.scan(
-            body, (peak0, state0), (env_days, keys))
-        return peak, state, ms, peaks
-
-    return jax.jit(month)
-
-
-def _day_inputs(env, technique, objective, seed, pretrain, cfg,
-                solver_state0=None, routed: bool = False):
-    """Replicates the reference loop's key discipline + initial solver state.
-
-    An injected ``solver_state0`` short-circuits state construction (no
-    throwaway pretrain/init work) while keeping the key discipline intact.
-    """
-    key = jax.random.PRNGKey(seed)
-    kp, key = jax.random.split(key)
-    if solver_state0 is not None:
-        return key, solver_state0
-    if technique == "gt-drl":
-        c = cfg or gt_drl.GTDRLConfig()
-        state0 = (gt_drl.pretrain(kp, env, objective, c, routed) if pretrain
-                  else gt_drl.init_agents(jax.random.PRNGKey(0), env, c, routed))
-    else:
-        state0 = ()
-    return key, state0
-
-
-def _format_day(ms, hours: int, technique: str, objective: str) -> Dict[str, Any]:
-    """Stacked (hours,) metric arrays -> the run_day result dict."""
-    host = {k: np.asarray(v).astype(float).tolist() for k, v in ms.items()}
-    per_epoch = [{**{k: host[k][t] for k in host}, "tau": t} for t in range(hours)]
-    totals = {k: 0.0 for k in _TOTAL_KEYS}
-    for row in per_epoch:
-        for k in totals:
-            totals[k] += row[k]
-    return {"per_epoch": per_epoch, "totals": totals, "technique": technique,
-            "objective": objective}
+def _spec(technique, objective, engine, **kw):
+    from . import experiment
+    return experiment.ExperimentSpec(technique=technique, objective=objective,
+                                     engine=engine, **kw)
 
 
 def run_day_scan(
@@ -245,17 +164,12 @@ def run_day_scan(
     routed: bool = False,
 ) -> Dict[str, Any]:
     """One technique through a day as a single jitted lax.scan call.
-
-    ``solver_state0`` injects an initial solver state (deployed GT-DRL
-    agents), overriding the pretrain/init derived from ``seed``. ``routed``
-    plays the per-source routing game over the (S, I, D) tensor.
-    """
-    key, state0 = _day_inputs(env, technique, objective, seed, pretrain,
-                              cfg_override, solver_state0, routed)
-    peak0 = peak_state0 if peak_state0 is not None else jnp.zeros((E.num_dcs(env),))
-    day = _compiled_day(technique, objective, hours, cfg_override, routed)
-    _, _, ms = day(env, key, peak0, state0)
-    return _format_day(ms, hours, technique, objective)
+    Deprecated shim over ``experiment.run(spec, env)`` with engine="scan"."""
+    from . import experiment
+    spec = _spec(technique, objective, "scan", seed=seed, hours=hours,
+                 pretrain=pretrain, cfg=cfg_override, routed=routed)
+    return experiment.run(spec, env, peak_state0=peak_state0,
+                          solver_state0=solver_state0)
 
 
 def run_days_batched(
@@ -269,44 +183,16 @@ def run_days_batched(
     cfg_override: Any = None,
     solver_state0: Any = None,
     routed: bool = False,
+    shard: bool = False,
 ) -> Dict[str, Any]:
     """Evaluate a fleet of scenario-days in ONE compiled vmapped call.
-
-    ``envs``: a list of same-shape EnvParams (e.g. a materialized scenario
-    suite) or an already-stacked batched EnvParams. ``seeds`` defaults to
-    ``range(n)`` — one RNG stream per day, split exactly like ``run_day``.
-    GT-DRL pretrains once (deploy-once) and the agents are broadcast;
-    ``solver_state0`` injects an already-deployed snapshot instead.
-
-    Returns ``{"totals": {k: (n,)}, "per_epoch": {k: (n, hours)}}`` numpy
-    arrays plus bookkeeping fields.
-    """
-    if isinstance(envs, E.EnvParams) and envs.er.ndim == 2:
-        envs = [envs]  # single env == batch of one (compare_techniques parity)
-    if isinstance(envs, E.EnvParams):
-        env_b, n = envs, int(envs.er.shape[0])
-        env0 = jax.tree_util.tree_map(lambda x: x[0], envs)
-    else:
-        envs = list(envs)
-        env_b, n = E.stack_envs(envs), len(envs)
-        env0 = envs[0]
-    seeds = list(range(n)) if seeds is None else list(seeds)
-    if len(seeds) != n:
-        raise ValueError(f"{len(seeds)} seeds for {n} scenario-days")
-
-    # per-day keys split exactly as run_day splits them; gt-drl pretrains
-    # ONCE on the first seed's pretrain key (deploy-once semantics)
-    keys = jnp.stack([jax.random.split(jax.random.PRNGKey(s))[1] for s in seeds])
-    _, state0 = _day_inputs(env0, technique, objective, seeds[0], pretrain,
-                            cfg_override, solver_state0, routed)
-    peak0 = jnp.zeros((E.num_dcs(env0),))
-
-    batch = _compiled_batch(technique, objective, hours, cfg_override, routed)
-    _, _, ms = batch(env_b, keys, peak0, state0)
-    out = {k: np.asarray(v) for k, v in ms.items()}  # (n, hours) each
-    totals = {k: out[k].sum(axis=1) for k in _TOTAL_KEYS}
-    return {"totals": totals, "per_epoch": out, "technique": technique,
-            "objective": objective, "seeds": seeds}
+    Deprecated shim over ``experiment.run(spec, envs)`` with
+    engine="batched" (which also exposes ``shard=True`` device sharding)."""
+    from . import experiment
+    spec = _spec(technique, objective, "batched", hours=hours,
+                 pretrain=pretrain, cfg=cfg_override, routed=routed,
+                 seeds=None if seeds is None else tuple(seeds))
+    return experiment.run(spec, envs, solver_state0=solver_state0, shard=shard)
 
 
 def run_month(
@@ -324,51 +210,14 @@ def run_month(
     routed: bool = False,
 ) -> Dict[str, Any]:
     """Month-scale episode: a second-level lax.scan over days in ONE compile.
+    Deprecated shim over ``experiment.run(spec, envs)`` with engine="month"."""
+    from . import experiment
+    spec = _spec(technique, objective, "month", days=days, seed=seed,
+                 hours=hours, pretrain=pretrain, cfg=cfg_override,
+                 routed=routed)
+    return experiment.run(spec, envs, peak_state0=peak_state0,
+                          solver_state0=solver_state0)
 
-    The monthly peak state (and, for gt-drl, the per-player agents) thread
-    across days, so the peak-demand charge is a real planning signal: an
-    assignment that sets a new monthly peak on day 3 pays for it all month.
-
-    ``envs``: one EnvParams (repeated for ``days`` days, default 30), a list
-    of per-day EnvParams or (name, EnvParams) rows (``scenarios.build_month``
-    output works directly), or an already-stacked (days, ...) EnvParams. Day
-    ``d`` uses the RNG stream of ``run_day(seed=seed + d)``, so day 0 with a
-    zero peak matches ``run_day`` exactly.
-
-    Returns per-day (days, hours) metric arrays, per-day totals, month
-    totals, and the end-of-day monthly peak trajectory ``peak_w`` (days, D).
-    """
-    if isinstance(envs, E.EnvParams) and envs.er.ndim == 2:
-        n = 30 if days is None else int(days)
-        env0, env_days = envs, E.tile_env(envs, n)
-    elif isinstance(envs, E.EnvParams):
-        n = int(envs.er.shape[0])
-        env0, env_days = jax.tree_util.tree_map(lambda x: x[0], envs), envs
-    else:
-        envs = [e if isinstance(e, E.EnvParams) else e[1] for e in envs]
-        n, env0, env_days = len(envs), envs[0], E.stack_envs(envs)
-    if days is not None and int(days) != n:
-        raise ValueError(f"days={days} but {n} per-day envs were given")
-
-    keys = jnp.stack(
-        [jax.random.split(jax.random.PRNGKey(seed + d))[1] for d in range(n)])
-    _, state0 = _day_inputs(env0, technique, objective, seed, pretrain,
-                            cfg_override, solver_state0, routed)
-    peak0 = peak_state0 if peak_state0 is not None else jnp.zeros((E.num_dcs(env0),))
-
-    month = _compiled_month(technique, objective, hours, cfg_override, routed)
-    final_peak, _, ms, peaks = month(env_days, keys, peak0, state0)
-    per_day = {k: np.asarray(v) for k, v in ms.items()}  # (n, hours) each
-    day_totals = {k: per_day[k].sum(axis=1) for k in _TOTAL_KEYS}
-    return {"per_day": per_day, "day_totals": day_totals,
-            "totals": {k: float(day_totals[k].sum()) for k in _TOTAL_KEYS},
-            "peak_w": np.asarray(peaks), "final_peak_w": np.asarray(final_peak),
-            "days": n, "technique": technique, "objective": objective}
-
-
-# ---------------------------------------------------------------------------
-# day protocol entry points
-# ---------------------------------------------------------------------------
 
 def run_day(
     env: E.EnvParams,
@@ -387,13 +236,14 @@ def run_day(
 ) -> Dict[str, Any]:
     """Run one technique through a day; returns per-epoch + total metrics.
 
-    ``engine="scan"`` compiles the whole day into one call; ``"loop"`` is
-    the reference Python hour-loop. A prebuilt ``solver`` closure forces the
-    loop engine (the closure may carry state across calls/runs);
-    ``solver_state0`` injects initial solver state into the scan engine.
-    ``routed`` plays the (S, I, D) routing game in either engine; with the
-    degenerate S = 1 origin it reproduces the unrouted numbers bit-for-bit.
+    Deprecated shim over ``experiment.run``. ``engine="scan"`` compiles the
+    whole day into one call; ``"loop"`` is the reference Python hour-loop. A
+    prebuilt ``solver`` closure forces the loop engine (the closure may
+    carry state across calls/runs); ``solver_state0`` injects initial solver
+    state into the scan engine. ``routed`` plays the (S, I, D) routing game
+    in either engine.
     """
+    from . import experiment
     if engine not in ("scan", "loop"):
         raise ValueError(f"unknown engine {engine!r}; known: scan, loop")
     if solver is None and engine == "scan":
@@ -401,36 +251,9 @@ def run_day(
                             pretrain=pretrain, peak_state0=peak_state0,
                             cfg_override=cfg_override, solver_state0=solver_state0,
                             routed=routed)
-    key = jax.random.PRNGKey(seed)
-    kp, key = jax.random.split(key)
-    if solver is None:
-        solver = get_scheduler(
-            technique, env, objective,
-            pretrain_key=kp if (technique == "gt-drl" and pretrain) else None,
-            routed=routed,
-            **({"cfg": cfg_override} if cfg_override is not None else {}),
-        )
-    d = E.num_dcs(env)
-    peak = peak_state0 if peak_state0 is not None else jnp.zeros((d,))
-    epoch_metrics: List[Dict[str, jnp.ndarray]] = []
-    for tau in range(hours):
-        key, ks = jax.random.split(key)
-        ctx = GameContext(env=env, tau=jnp.int32(tau), objective=objective,
-                          routed=routed)
-        res = solver(ks, ctx, peak)
-        ar = fractions_to_ar(ctx, res.fractions)
-        peak, m = E.step_epoch(env, peak, ar, jnp.int32(tau))
-        epoch_metrics.append(m)  # stays on device; no per-epoch host sync
-    per_epoch: List[Dict[str, float]] = []
-    totals = {k: 0.0 for k in _TOTAL_KEYS}
-    for tau, m in enumerate(jax.device_get(epoch_metrics)):  # ONE transfer
-        row = {k: float(v) for k, v in m.items()}
-        row["tau"] = tau
-        per_epoch.append(row)
-        for k in totals:
-            totals[k] += row[k]
-    return {"per_epoch": per_epoch, "totals": totals, "technique": technique,
-            "objective": objective}
+    spec = _spec(technique, objective, "loop", seed=seed, hours=hours,
+                 pretrain=pretrain, cfg=cfg_override, routed=routed)
+    return experiment.run(spec, env, peak_state0=peak_state0, solver=solver)
 
 
 def _stats(vals, curves) -> Dict[str, Any]:
@@ -455,6 +278,7 @@ def compare_techniques(
     engine: str = "batched",
     cfg_overrides: Optional[Dict[str, Any]] = None,
     routed: bool = False,
+    shard: bool = False,
 ) -> Dict[str, Dict[str, Any]]:
     """The paper's protocol: several runs (one env per resampled arrival
     pattern), mean±stderr of daily totals. The ranked metric is daily carbon
@@ -463,15 +287,14 @@ def compare_techniques(
     on the latency-priced bill).
 
     ``engine="batched"`` (default) drives ``run_days_batched`` once per
-    technique — the whole env suite is one vmapped compile, with GT-DRL
-    agents pretrained once (deploy-once, on ``PRNGKey(seed0 + 999)``) and
-    broadcast through the scan carry. ``engine="loop"`` is the hour-loop
-    parity reference with identical deploy-once semantics: each day starts
-    from the same deployed agent snapshot, so both engines agree within
-    float32 tolerance. (The seed implementation instead shared one stateful
-    scheduler across days — agents kept adapting online, which cannot vmap;
-    per-day reset from the deployed snapshot is the protocol now, in both
-    engines.) ``cfg_overrides`` maps technique -> config.
+    technique — the whole env suite is one vmapped compile (sharded across
+    devices with ``shard=True``), with stateful techniques deployed once
+    (on ``PRNGKey(seed0 + 999)``) and broadcast through the scan carry.
+    ``engine="loop"`` is the hour-loop parity reference with identical
+    deploy-once semantics: each day starts from the same deployed snapshot,
+    so both engines agree within float32 tolerance. ``cfg_overrides`` maps
+    technique -> config. Any technique registered via
+    ``game.register_technique`` can appear in ``techniques``.
     """
     if isinstance(envs, E.EnvParams):
         envs = [envs]
@@ -483,22 +306,22 @@ def compare_techniques(
     seeds = [seed0 + r for r in range(len(envs))]
     out: Dict[str, Dict[str, Any]] = {}
 
-    def deployed_agents(cfg):
-        c = cfg or gt_drl.GTDRLConfig()
-        return gt_drl.pretrain(jax.random.PRNGKey(seed0 + 999), envs[0],
-                               objective, c, routed)
+    def deployed_state(tdef, cfg):
+        return tdef.init_state(jax.random.PRNGKey(seed0 + 999), envs[0],
+                               objective, cfg, routed, True)
 
     if engine == "loop":
         for t in techniques:
+            tdef = game.get_technique(t)
             cfg = overrides.get(t)
-            agents0 = deployed_agents(cfg) if t == "gt-drl" else None
-            solver = None if t == "gt-drl" else get_scheduler(
+            state0 = deployed_state(tdef, cfg) if tdef.stateful else None
+            solver = None if tdef.stateful else get_scheduler(
                 t, envs[0], objective,
                 **({"cfg": cfg} if cfg is not None else {}))
             vals, curves = [], []
             for r, env in enumerate(envs):
-                s = (GTDRLScheduler(env, objective, cfg, agents=agents0).solve_epoch
-                     if t == "gt-drl" else solver)
+                s = (StatefulScheduler(t, state0, cfg).solve_epoch
+                     if tdef.stateful else solver)
                 res = run_day(env, t, objective, seed=seeds[r], hours=hours,
                               solver=s, engine="loop", routed=routed)
                 vals.append(res["totals"][metric])
@@ -508,10 +331,11 @@ def compare_techniques(
 
     env_b = E.stack_envs(envs)
     for t in techniques:
+        tdef = game.get_technique(t)
         cfg = overrides.get(t)
-        state0 = deployed_agents(cfg) if t == "gt-drl" else None
+        state0 = deployed_state(tdef, cfg) if tdef.stateful else None
         res = run_days_batched(env_b, t, objective, seeds=seeds, hours=hours,
                                cfg_override=cfg, solver_state0=state0,
-                               routed=routed)
+                               routed=routed, shard=shard)
         out[t] = _stats(res["totals"][metric], res["per_epoch"][metric])
     return out

@@ -182,6 +182,24 @@ def tile_env(env: EnvParams, n: int) -> EnvParams:
         lambda x: jnp.broadcast_to(x, (n,) + x.shape), env)
 
 
+def pad_env_batch(env_b: EnvParams, n: int) -> EnvParams:
+    """Pad a stacked EnvParams' leading axis to ``n`` rows by repeating the
+    last scenario-day.
+
+    The device-sharded batched engine needs the env axis divisible by the
+    mesh size; padding with a real row keeps every shard's program identical
+    (the caller drops the padded rows' metrics).
+    """
+    m = int(env_b.er.shape[0])
+    if n == m:
+        return env_b
+    if n < m:
+        raise ValueError(f"cannot pad a {m}-row batch down to {n}")
+    return jax.tree_util.tree_map(
+        lambda x: jnp.concatenate(
+            [x, jnp.broadcast_to(x[-1:], (n - m,) + x.shape[1:])]), env_b)
+
+
 def num_players(env: EnvParams) -> int:
     return env.er.shape[0]
 

@@ -1,15 +1,19 @@
 """Scenario engine: composable EnvParams transforms + named stress suites.
 
-See ``registry`` (the Scenario spec and transform registry), ``transforms``
-(the ≥7 built-in event families) and ``suites`` (named suites sized for the
-batched day engine ``repro.core.schedulers.run_days_batched``).
+See ``registry`` (the Scenario spec, transform registry and severity-grid
+expansion), ``transforms`` (the built-in event families, each with a
+declared severity knob) and ``suites`` (named suites and ``build_grid``
+severity grids, sized for the batched day engine — one
+``repro.core.experiment`` compile per technique).
 """
 from . import transforms  # noqa: F401  (imports register the built-ins)
-from .registry import (Scenario, Transform, apply_all, compose, get, make,
-                       names, register)
-from .suites import SUITES, build_month, build_suite, suite_names
+from .registry import (Scenario, Transform, apply_all, compose, expand_grid,
+                       get, make, names, register, severity_knob)
+from .suites import (SUITES, build_grid, build_month, build_suite,
+                     suite_names)
 
 __all__ = [
-    "Scenario", "Transform", "apply_all", "compose", "get", "make", "names",
-    "register", "SUITES", "build_month", "build_suite", "suite_names",
+    "Scenario", "Transform", "apply_all", "compose", "expand_grid", "get",
+    "make", "names", "register", "severity_knob", "SUITES", "build_grid",
+    "build_month", "build_suite", "suite_names",
 ]

@@ -9,7 +9,7 @@ from __future__ import annotations
 from typing import Dict, List, Tuple
 
 from ..dcsim.env import EnvParams
-from .registry import Scenario, apply_all
+from .registry import Scenario, apply_all, expand_grid, severity_knob
 
 # Each suite: name -> ordered {scenario_day: [Scenario, ...]}.
 SUITES: Dict[str, Dict[str, List[Scenario]]] = {
@@ -119,6 +119,38 @@ def build_suite(name: str, base_env: EnvParams) -> List[Tuple[str, EnvParams]]:
     except KeyError:
         raise KeyError(f"unknown suite {name!r}; known: {suite_names()}") from None
     return [(day, apply_all(base_env, scenarios)) for day, scenarios in rows.items()]
+
+
+def _point_label(point) -> str:
+    """Compact "name=value|…" label for one grid point (severity knob value
+    when declared, the full params dict otherwise)."""
+    parts = []
+    for name, params in point.items():
+        try:
+            v = params.get(severity_knob(name))
+        except ValueError:
+            v = None
+        parts.append(f"{name}={v if v is not None else params}")
+    return "|".join(parts)
+
+
+def build_grid(base_env: EnvParams, grid, *, base=()) -> Tuple[list, List[Tuple[str, EnvParams]]]:
+    """Materialize a severity grid: ``(points, rows)``.
+
+    ``grid`` is the ``registry.expand_grid`` grammar — transform name ->
+    sequence of params dicts or bare severity-knob scalars; the cartesian
+    product becomes one scenario-day per point. ``base`` scenarios (or
+    transforms) apply to ``base_env`` first, before every point — e.g. an
+    ``sla_tighten`` row so every grid point prices misses. All rows share
+    the base env's shapes, so the whole grid stacks into ONE batched-engine
+    compile (``repro.core.experiment.sweep`` drives exactly this).
+    """
+    points = expand_grid(grid)
+    env0 = apply_all(base_env, base)
+    rows = [(_point_label(pt),
+             apply_all(env0, [Scenario(n, p) for n, p in pt.items()]))
+            for pt in points]
+    return points, rows
 
 
 def build_month(base_env: EnvParams, days: int = 30, *,

@@ -22,6 +22,11 @@ heterogeneous regimes of Green-LLM, arXiv:2507.09942):
 Windows are ``[start, start+duration)`` in UTC hours, wrapping modulo 24.
 All randomness flows through an explicit ``seed`` so a transform is a fixed
 function of its parameters; shapes and dtypes are always preserved.
+
+Each registration declares its canonical *severity knob* (``severity=`` on
+``@register``): the one parameter a magnitude grid sweeps — so severity
+sweeps (``repro.core.experiment.sweep`` / ``scenarios.build_grid``) can say
+``{"wan_degradation": (1.0, 2.0, 4.0)}`` and mean the ``factor`` axis.
 """
 from __future__ import annotations
 
@@ -67,7 +72,7 @@ def identity() -> Transform:
     return lambda env: env
 
 
-@register("flash_crowd")
+@register("flash_crowd", severity="magnitude")
 def flash_crowd(start: int = 18, duration: int = 3, magnitude: float = 3.0,
                 tasks: Optional[Sequence[int]] = None,
                 sources: Optional[Sequence[int]] = None) -> Transform:
@@ -102,7 +107,7 @@ def flash_crowd(start: int = 18, duration: int = 3, magnitude: float = 3.0,
     return t
 
 
-@register("dc_outage")
+@register("dc_outage", severity="duration")
 def dc_outage(dc: int = 0, start: int = 8, duration: int = 6) -> Transform:
     """Full outage of one DC for the window: avail → 0 (capacity, IT power
     and idle draw all vanish; project_feasible sheds its load elsewhere)."""
@@ -113,7 +118,7 @@ def dc_outage(dc: int = 0, start: int = 8, duration: int = 6) -> Transform:
     return t
 
 
-@register("demand_response")
+@register("demand_response", severity="curtail")
 def demand_response(dc: int = 0, start: int = 16, duration: int = 4,
                     curtail: float = 0.5) -> Transform:
     """Demand-response event: the DC sheds ``curtail`` of its capacity."""
@@ -124,7 +129,7 @@ def demand_response(dc: int = 0, start: int = 16, duration: int = 4,
     return t
 
 
-@register("carbon_spike")
+@register("carbon_spike", severity="magnitude")
 def carbon_spike(start: int = 6, duration: int = 6, magnitude: float = 2.5,
                  dcs: Optional[Sequence[int]] = None) -> Transform:
     """Grid carbon-intensity surge (e.g. coal peakers online) in the window."""
@@ -135,7 +140,7 @@ def carbon_spike(start: int = 6, duration: int = 6, magnitude: float = 2.5,
     return t
 
 
-@register("carbon_diurnal")
+@register("carbon_diurnal", severity="amplitude")
 def carbon_diurnal(amplitude: float = 0.35, trough_utc: int = 20) -> Transform:
     """Marginal-carbon diurnal shape: intensity dips ``amplitude`` at
     ``trough_utc`` (solar-heavy afternoon grid) and rises overnight."""
@@ -147,7 +152,7 @@ def carbon_diurnal(amplitude: float = 0.35, trough_utc: int = 20) -> Transform:
     return t
 
 
-@register("price_surge")
+@register("price_surge", severity="magnitude")
 def price_surge(start: int = 14, duration: int = 6, magnitude: float = 2.0,
                 dcs: Optional[Sequence[int]] = None) -> Transform:
     """TOU price surge (grid scarcity / heat event) in the window."""
@@ -158,7 +163,7 @@ def price_surge(start: int = 14, duration: int = 6, magnitude: float = 2.0,
     return t
 
 
-@register("renewable_drought")
+@register("renewable_drought", severity="scale")
 def renewable_drought(scale: float = 0.15, start: int = 0, duration: int = 24,
                       dcs: Optional[Sequence[int]] = None) -> Transform:
     """Becalmed/overcast day: on-site renewables scaled to ``scale``."""
@@ -183,7 +188,7 @@ def traffic_pattern(kind: str = "weekday", seed: int = 0,
     return t
 
 
-@register("sla_tighten")
+@register("sla_tighten", severity="tighten")
 def sla_tighten(tighten: float = 1.0, price: float = 1e-4,
                 weight: Optional[float] = None,
                 tasks: Optional[Sequence[int]] = None) -> Transform:
@@ -205,7 +210,7 @@ def sla_tighten(tighten: float = 1.0, price: float = 1e-4,
     return t
 
 
-@register("wan_degradation")
+@register("wan_degradation", severity="factor")
 def wan_degradation(factor: float = 3.0, extra_ms: float = 20.0) -> Transform:
     """WAN congestion/reroute event: inter-region RTTs × ``factor`` plus
     ``extra_ms`` of queueing delay on every off-diagonal (cross-region)
@@ -228,7 +233,7 @@ def wan_degradation(factor: float = 3.0, extra_ms: float = 20.0) -> Transform:
     return t
 
 
-@register("origin_shift")
+@register("origin_shift", severity="weight")
 def origin_shift(toward: Sequence[int] = (0,), weight: float = 0.8,
                  start: int = 0, duration: int = 24,
                  tasks: Optional[Sequence[int]] = None) -> Transform:
@@ -252,7 +257,7 @@ def origin_shift(toward: Sequence[int] = (0,), weight: float = 0.8,
     return t
 
 
-@register("arrival_resample")
+@register("arrival_resample", severity="std")
 def arrival_resample(seed: int = 0, std: float = 0.2) -> Transform:
     """The paper's run-to-run variation: CAR ~ N(CAR, std·CAR), clipped."""
     def t(env: EnvParams) -> EnvParams:

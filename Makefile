@@ -2,7 +2,8 @@
 PY ?= python
 export PYTHONPATH := src$(if $(PYTHONPATH),:$(PYTHONPATH))
 
-.PHONY: check bench bench-quick bench-scenarios bench-smoke sweep-smoke
+.PHONY: check bench bench-quick bench-scenarios bench-smoke sweep-smoke \
+        obs-smoke scoreboard
 
 check:
 	$(PY) -m pytest -x -q
@@ -21,6 +22,16 @@ bench-scenarios:
 # so the per-source axis' overhead is tracked from PR 4 onward)
 bench-smoke:
 	REPRO_BENCH_QUICK=1 $(PY) -m benchmarks.run --only scenarios,engine --json BENCH_engine.json
+
+# telemetry smoke: taps-on vs taps-off parity over a 3-hour day for two
+# techniques, run records written, scoreboard rendered from them (see
+# repro.obs; the full 5-technique artifact is `python examples/run_obs.py`)
+obs-smoke:
+	$(PY) examples/run_obs.py --quick
+
+# re-render the committed SCOREBOARD.md from the committed run records
+scoreboard:
+	$(PY) -m repro.obs runs/records.jsonl -o SCOREBOARD.md
 
 # severity-sweep smoke: the declarative ExperimentSpec sweep API end to end
 # (2x2 wan_degradation x origin_shift grid, routed fd vs a source-blind

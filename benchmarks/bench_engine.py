@@ -15,6 +15,9 @@ Rows (name, us_per_call, derived):
   engine/day_scan_routed      us per compiled day over the (S, I, D) routing
                               tensor (overhead vs the unrouted SLA day
                               derived — the cost of the per-source axis)
+  engine/day_scan_tap_overhead us per compiled day with the engine/hour tap
+                              streaming (overhead vs the silent taps-off
+                              artifact derived — the price of live telemetry)
   engine/day_batched_sharded  us per batched fleet evaluation through the
                               shard_map-sharded env axis (overhead vs the
                               plain vmapped engine derived; on one device
@@ -116,6 +119,23 @@ def run(rows):
              + (f";overhead_vs_cost={day_s['cost_sla'] / max(day_s['cost'], 1e-9):.2f}x"
                 if obj == "cost_sla" else ""))
 
+    # -- tap overhead: the telemetry-streaming day vs the silent artifact ----
+    from repro import obs
+    from repro.core import experiment as X
+    tap_spec = X.ExperimentSpec(technique="fd", objective="cost", hours=HOURS,
+                                cfg=CFGS["fd"], taps=())
+    X.run(tap_spec, sla_env)  # warm the taps-off artifact
+    with Timer() as tm:
+        X.run(tap_spec, sla_env)
+    off_s = tm.seconds
+    tapped = tap_spec.replace(taps=("engine/hour",))
+    X.run(tapped, sla_env)  # warm the tapped artifact (separate compile key)
+    with obs.capture("engine/hour") as buf, Timer() as tm:
+        X.run(tapped, sla_env)
+    emit(rows, "engine/day_scan_tap_overhead", tm.seconds,
+         f"hours={HOURS};events={len(buf.events)};"
+         f"overhead_vs_off={tm.seconds / max(off_s, 1e-9):.2f}x")
+
     # -- routed day: the (S, I, D) routing tensor's compile/runtime cost -----
     route_env = S.make("origin_shift", toward=(0,), weight=0.8)(sla_env)
     rkw = dict(objective="cost_sla", hours=HOURS, seed=0,
@@ -129,7 +149,6 @@ def run(rows):
          f"overhead_vs_unrouted={tm.seconds / max(day_s['cost_sla'], 1e-9):.2f}x")
 
     # -- spec-driven engines: device-sharded batched day + severity sweep ----
-    from repro.core import experiment as X
     spec = X.ExperimentSpec(technique="fd", objective="carbon", engine="batched",
                             hours=HOURS, cfg=CFGS["fd"])
     env_b = E.stack_envs(envs)

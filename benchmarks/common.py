@@ -2,9 +2,9 @@
 from __future__ import annotations
 
 import os
-import time
 from typing import Dict, List
 
+from repro import obs
 from repro.dcsim import env as E
 
 QUICK = os.environ.get("REPRO_BENCH_QUICK", "0") == "1"
@@ -22,16 +22,20 @@ def build_envs(num_dcs: int, runs: int = RUNS, pattern: str = "sinusoidal",
             for r in range(runs)]
 
 
-class Timer:
-    def __enter__(self):
-        self.t0 = time.time()
-        return self
+class Timer(obs.Span):
+    """A bench region timer; now an ``obs.Span`` so benchmark timings land
+    in the same span stream as the engine telemetry (``obs.all_spans()``)."""
 
-    def __exit__(self, *a):
-        self.seconds = time.time() - self.t0
+    def __init__(self):
+        super().__init__(name="bench")
+
+    @property
+    def t0(self):  # legacy alias used by older bench scripts
+        return self._t0
 
 
 def emit(rows: List[str], name: str, seconds: float, derived: str):
     """CSV row: name, microseconds per call, derived metric string."""
+    obs.note_bench(name, seconds, derived)
     rows.append(f"{name},{seconds * 1e6:.0f},{derived}")
     print(rows[-1], flush=True)

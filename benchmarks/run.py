@@ -21,6 +21,8 @@ ALL = ("carbon", "scalability", "arrival", "renewables", "costs", "scenarios",
 
 def rows_to_json(rows, which, wall_s: float) -> dict:
     """Parse the CSV rows into the BENCH_*.json payload."""
+    from repro import obs
+
     from .common import HOURS, QUICK, RUNS
     entries = []
     for r in rows[1:]:  # skip the header
@@ -35,6 +37,9 @@ def rows_to_json(rows, which, wall_s: float) -> dict:
             "runs": RUNS,
             "wall_s": round(wall_s, 1),
             "timestamp_utc": time.strftime("%Y-%m-%dT%H:%M:%SZ", time.gmtime()),
+            # provenance: a perf number without the machine/toolchain that
+            # produced it is not comparable across PRs
+            **obs.run_info(),
         },
         "rows": entries,
     }

@@ -32,18 +32,24 @@ from __future__ import annotations
 
 import dataclasses
 import functools
+import time
 from typing import Any, Callable, Dict, List, Mapping, Optional, Sequence, Tuple
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
+from .. import obs
 from ..dcsim import env as E
 from . import game
 from . import schedulers as SCH
 from .game import GameContext, fractions_to_ar
 
 _TOTAL_KEYS = ("carbon_kg", "cost_usd", "sla_miss_cost_usd", "violation")
+
+# per-hour physical signals streamed by the "engine/hour" tap
+_TAP_HOUR_KEYS = ("carbon_kg", "cost_usd", "sla_miss_cost_usd", "latency_ms",
+                  "grid_power_w")
 
 ENGINES = ("scan", "loop", "batched", "month")
 
@@ -65,6 +71,13 @@ class ExperimentSpec:
     ``"month"`` — a second-level scan threading the monthly peak across
     days. ``seeds`` (batched) / ``seed`` (everything else) reproduce the
     legacy entry points' RNG discipline exactly.
+
+    ``taps`` opts the spec into telemetry streams (``repro.obs`` tap
+    patterns, e.g. ``("engine/hour", "gt_drl/*")``): tapped engines compile
+    as *separate* cache entries whose scan bodies stream diagnostics to the
+    obs ring buffer; ``None`` defers to the ambient ``obs.taps(...)``
+    context (default: everything off, and the taps-off artifacts are
+    bit-for-bit the pre-obs programs).
     """
     technique: str = "fd"
     objective: str = "carbon"
@@ -76,6 +89,7 @@ class ExperimentSpec:
     seeds: Optional[Tuple[int, ...]] = None  # batched engine: one per env
     pretrain: bool = True
     cfg: Any = None                       # solver config (frozen dataclass)
+    taps: Optional[Tuple[str, ...]] = None   # obs tap patterns (None: ambient)
 
     def __post_init__(self):
         if self.engine not in ENGINES:
@@ -86,6 +100,8 @@ class ExperimentSpec:
                              f"known: {E.OBJECTIVES}")
         if self.seeds is not None and not isinstance(self.seeds, tuple):
             object.__setattr__(self, "seeds", tuple(self.seeds))
+        if self.taps is not None and not isinstance(self.taps, tuple):
+            object.__setattr__(self, "taps", tuple(self.taps))
 
     def replace(self, **changes) -> "ExperimentSpec":
         return dataclasses.replace(self, **changes)
@@ -94,6 +110,13 @@ class ExperimentSpec:
         """The compile-relevant fields, in ``_day_core`` argument order."""
         return (self.technique, self.objective, self.hours, self.cfg,
                 self.routed)
+
+    def effective_taps(self) -> frozenset:
+        """The tap set this spec's engines compile under: the spec's own
+        ``taps`` when given, else the ambient ``obs.taps(...)`` state. Part
+        of the compile key, so tapped and untapped artifacts coexist."""
+        return (obs.active_taps() if self.taps is None
+                else frozenset(self.taps))
 
 
 # ---------------------------------------------------------------------------
@@ -115,12 +138,17 @@ def _solver_step(technique: str, cfg) -> Callable:
 
 @functools.lru_cache(maxsize=None)
 def _day_core(technique: str, objective: str, hours: int, cfg,
-              routed: bool = False) -> Callable:
+              routed: bool = False, taps: frozenset = frozenset()) -> Callable:
     """day(env, key, peak0, state0) -> (peak, state, metrics (hours,)-dict).
 
     Pure and jit/vmap-friendly; the RNG key is split exactly as the
     reference loop does, so both engines see the same per-epoch keys.
     ``routed`` plays the (S, I, D) routing game instead of the (I, D) one.
+
+    ``taps`` only keys the cache: the ``obs.tap`` calls in the body check
+    trace-time enablement themselves (the dispatch wrapper pins the active
+    set to this key's ``taps``), so a taps-off core lowers to exactly the
+    pre-obs program and a tapped core is a distinct artifact.
     """
     step = _solver_step(technique, cfg)
 
@@ -131,8 +159,11 @@ def _day_core(technique: str, objective: str, hours: int, cfg,
             ctx = GameContext(env=env, tau=tau, objective=objective,
                               routed=routed)
             state, res = step(ks, state, ctx, peak)
+            game.tap_nash_residual(ctx, res.fractions, peak)
             ar = fractions_to_ar(ctx, res.fractions)
             peak, m = E.step_epoch(env, peak, ar, tau)
+            obs.tap("engine/hour",
+                    {"tau": tau, **{k: m[k] for k in _TAP_HOUR_KEYS}})
             return (key, peak, state), m
 
         (_, peak, state), ms = jax.lax.scan(
@@ -167,19 +198,21 @@ _KINDS = ("day", "batched", "sharded", "month")
 
 
 @functools.lru_cache(maxsize=None)
-def _compiled(kind: str, technique: str, objective: str, hours: int, cfg,
-              routed: bool) -> Callable:
+def _compiled_raw(kind: str, technique: str, objective: str, hours: int, cfg,
+                  routed: bool, taps: frozenset) -> Callable:
     """THE compile cache: one jitted artifact per (engine kind, spec static
-    fields), shared by ``run``/``sweep`` and every legacy shim — no engine
-    compiles per call site anymore."""
-    core = _day_core(technique, objective, hours, cfg, routed)
+    fields, tap set), shared by ``run``/``sweep`` and every legacy shim — no
+    engine compiles per call site anymore. Artifacts come back wrapped in
+    the obs dispatch span (per-call timing + trace-time tap pinning)."""
+    key = (kind, technique, objective, hours, cfg, routed, taps)
+    core = _day_core(technique, objective, hours, cfg, routed, taps)
     if kind == "day":
-        return jax.jit(core)
-    if kind == "batched":
-        return jax.jit(jax.vmap(core, in_axes=(0, 0, None, None)))
-    if kind == "sharded":
-        return _sharded_batch(core)
-    if kind == "month":
+        fn = jax.jit(core)
+    elif kind == "batched":
+        fn = jax.jit(jax.vmap(core, in_axes=(0, 0, None, None)))
+    elif kind == "sharded":
+        fn = _sharded_batch(core)
+    elif kind == "month":
         def month(env_days, keys, peak0, state0):
             def body(carry, x):
                 peak, state = carry
@@ -191,22 +224,52 @@ def _compiled(kind: str, technique: str, objective: str, hours: int, cfg,
                 body, (peak0, state0), (env_days, keys))
             return peak, state, ms, peaks
 
-        return jax.jit(month)
-    raise ValueError(f"unknown engine kind {kind!r}; known: {_KINDS}")
+        fn = jax.jit(month)
+    else:
+        raise ValueError(f"unknown engine kind {kind!r}; known: {_KINDS}")
+    return obs.spans.instrument_dispatch(key, fn)
 
 
-def compiled_engine(spec: ExperimentSpec, *, shard: bool = False) -> Callable:
-    """The spec's compiled engine (public access to the cache)."""
+def _compiled(kind: str, technique: str, objective: str, hours: int, cfg,
+              routed: bool, taps: frozenset = frozenset()) -> Callable:
+    """Front door to the compile cache: same artifact as ``_compiled_raw``
+    but every lookup/build is accounted in ``obs.cache_stats()``."""
+    key = (kind, technique, objective, hours, cfg, routed, taps)
+    hit = obs.spans.engine_lookup(key)
+    if hit:
+        return _compiled_raw(*key)
+    t0 = time.perf_counter()
+    fn = _compiled_raw(*key)
+    obs.spans.note_build(key, time.perf_counter() - t0)
+    return fn
+
+
+# the cache-introspection surface tests rely on (lru semantics preserved)
+_compiled.cache_info = _compiled_raw.cache_info
+
+
+def _engine_key(spec: ExperimentSpec, *, shard: bool = False) -> tuple:
+    """The compile-cache key ``run`` uses for this spec (also the join key
+    for ``obs.engine_stat`` / run records)."""
     kind = {"scan": "day", "batched": "sharded" if shard else "batched",
             "month": "month"}.get(spec.engine)
     if kind is None:
         raise ValueError(f"engine {spec.engine!r} is not compiled")
-    return _compiled(kind, *spec.static_key())
+    return (kind, *spec.static_key(), spec.effective_taps())
+
+
+def compiled_engine(spec: ExperimentSpec, *, shard: bool = False) -> Callable:
+    """The spec's compiled engine (public access to the cache)."""
+    return _compiled(*_engine_key(spec, shard=shard))
 
 
 def _clear_compile_caches() -> None:
     _day_core.cache_clear()
-    _compiled.cache_clear()
+    _compiled_raw.cache_clear()
+    obs.spans.note_eviction()
+
+
+_compiled.cache_clear = _clear_compile_caches
 
 
 # re-registering a technique name must not serve stale compiled engines
@@ -256,6 +319,7 @@ def run(
     solver_state0: Any = None,
     solver: Optional[Callable] = None,
     shard: bool = False,
+    record: Any = None,
 ) -> Dict[str, Any]:
     """Run one experiment. ``envs`` is a single EnvParams for the scan/loop
     engines, one-or-many (list or stacked) for batched, and one/list/stacked
@@ -266,10 +330,18 @@ def run(
     only); ``shard=True`` (batched only) shards the env axis across devices
     via ``shard_map`` — identical results, the batch is padded to the device
     count and the padded rows' metrics dropped.
+
+    ``record`` (True, or a JSONL path) appends a spec-keyed ``RunRecord``
+    — totals, convergence curves, engine timing spans, git/jax provenance —
+    under ``runs/`` (see ``repro.obs.records``).
     """
     if shard and spec.engine != "batched":
         raise ValueError(f"shard=True needs engine='batched', "
                          f"got {spec.engine!r}")
+    if shard and spec.effective_taps():
+        raise ValueError("taps stream through jax.debug.callback, which the "
+                         "shard_map engine does not support; run shard=False "
+                         "when tapping")
     if solver is not None and spec.engine != "loop":
         raise ValueError(f"a prebuilt solver closure needs engine='loop', "
                          f"got {spec.engine!r}")
@@ -282,12 +354,26 @@ def run(
                          "scan/batched/month-only")
     game.get_technique(spec.technique)  # fail fast with the known-names list
     if spec.engine == "scan":
-        return _run_scan(spec, envs, peak_state0, solver_state0)
-    if spec.engine == "loop":
-        return _run_loop(spec, envs, peak_state0, solver)
-    if spec.engine == "batched":
-        return _run_batched(spec, envs, solver_state0, shard)
-    return _run_month(spec, envs, peak_state0, solver_state0)
+        result = _run_scan(spec, envs, peak_state0, solver_state0)
+    elif spec.engine == "loop":
+        result = _run_loop(spec, envs, peak_state0, solver)
+    elif spec.engine == "batched":
+        result = _run_batched(spec, envs, solver_state0, shard)
+    else:
+        result = _run_month(spec, envs, peak_state0, solver_state0)
+    if record:
+        _record_run(spec, result, shard=shard, path=record)
+    return result
+
+
+def _record_run(spec: ExperimentSpec, result: Dict[str, Any], *,
+                shard: bool = False, path: Any = None,
+                kind: str = "run") -> str:
+    """Emit one JSONL RunRecord for a finished ``run`` result."""
+    engine_spans = (None if spec.engine == "loop"
+                    else obs.engine_stat(_engine_key(spec, shard=shard)))
+    rec = obs.make_record(spec, result, kind=kind, engine_spans=engine_spans)
+    return obs.write_record(rec, path if isinstance(path, str) else None)
 
 
 def _run_scan(spec, env, peak_state0, solver_state0):
@@ -296,7 +382,7 @@ def _run_scan(spec, env, peak_state0, solver_state0):
                               spec.routed)
     peak0 = (peak_state0 if peak_state0 is not None
              else jnp.zeros((E.num_dcs(env),)))
-    day = _compiled("day", *spec.static_key())
+    day = _compiled(*_engine_key(spec))
     _, _, ms = day(env, key, peak0, state0)
     return _format_day(ms, spec.hours, spec.technique, spec.objective)
 
@@ -366,7 +452,7 @@ def _run_batched(spec, envs, solver_state0, shard):
     peak0 = jnp.zeros((E.num_dcs(env0),))
 
     if not shard:
-        batch = _compiled("batched", *spec.static_key())
+        batch = _compiled(*_engine_key(spec))
         _, _, ms = batch(env_b, keys, peak0, state0)
     else:
         pad = (-n) % jax.device_count()
@@ -374,7 +460,7 @@ def _run_batched(spec, envs, solver_state0, shard):
             env_b = E.pad_env_batch(env_b, n + pad)
             keys = jnp.concatenate(
                 [keys, jnp.broadcast_to(keys[-1:], (pad,) + keys.shape[1:])])
-        batch = _compiled("sharded", *spec.static_key())
+        batch = _compiled(*_engine_key(spec, shard=True))
         _, _, ms = batch(env_b, keys, peak0, state0)
         if pad:
             ms = {k: v[:n] for k, v in ms.items()}
@@ -407,7 +493,7 @@ def _run_month(spec, envs, peak_state0, solver_state0):
     peak0 = (peak_state0 if peak_state0 is not None
              else jnp.zeros((E.num_dcs(env0),)))
 
-    month = _compiled("month", *spec.static_key())
+    month = _compiled(*_engine_key(spec))
     final_peak, _, ms, peaks = month(env_days, keys, peak0, state0)
     per_day = {k: np.asarray(v) for k, v in ms.items()}  # (n, hours) each
     day_totals = {k: per_day[k].sum(axis=1) for k in _TOTAL_KEYS}
@@ -431,6 +517,7 @@ def sweep(
     base_scenarios: Sequence[Any] = (),
     cfg_overrides: Optional[Mapping[str, Any]] = None,
     shard: bool = False,
+    record: Any = None,
 ) -> Dict[str, Any]:
     """Severity sweep: the cartesian ``grid`` of scenario-transform
     parameters expands into one stacked env batch, and every technique runs
@@ -468,6 +555,17 @@ def sweep(
                              seeds=(spec.seed,) * n)
         res = _run_batched(pspec, env_b, None, shard)
         results[t] = {"totals": res["totals"], "per_epoch": res["per_epoch"]}
+        if record:
+            # one record per technique: each grid point's daily totals form
+            # the "curve" along the sweep's label axis
+            rec = obs.make_record(
+                pspec, res, kind="sweep",
+                curves={k: np.asarray(v, dtype=float).tolist()
+                        for k, v in res["totals"].items()},
+                engine_spans=obs.engine_stat(_engine_key(pspec, shard=shard)),
+                extra={"labels": labels,
+                       "grid": {name: list(pts) for name, pts in grid.items()}})
+            obs.write_record(rec, record if isinstance(record, str) else None)
     return {"grid": {name: list(pts) for name, pts in grid.items()},
             "points": points, "labels": labels, "results": results,
             "objective": spec.objective, "hours": spec.hours,

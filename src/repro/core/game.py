@@ -26,6 +26,7 @@ from typing import Any, Callable, Dict, NamedTuple, Optional, Tuple
 import jax
 import jax.numpy as jnp
 
+from .. import obs
 from ..dcsim import env as E
 
 
@@ -173,6 +174,28 @@ def nash_residual(
         return jnp.maximum(base - best, 0.0) / (jnp.abs(base) + 1e-9)
 
     return jnp.max(jax.vmap(probe)(jnp.arange(i_n)))
+
+
+def tap_nash_residual(
+    ctx: GameContext,
+    fractions: jnp.ndarray,
+    peak_state: jnp.ndarray,
+    probe_steps: int = 8,
+    lr: float = 0.5,
+) -> None:
+    """Telemetry hook: stream the Nash-residual diagnostic per epoch.
+
+    A no-op unless the ``"game/nash_residual"`` tap is live (see
+    ``repro.obs``) — the probe is |I| short gradient ascents, so it is only
+    *computed* inside the tapped engine artifact; the taps-off program
+    never contains it. ``probe_steps`` defaults lower than the offline
+    diagnostic: a per-epoch convergence signal, not a certificate.
+    """
+    obs.tap("game/nash_residual",
+            thunk=lambda: {
+                "tau": ctx.tau,
+                "residual": nash_residual(ctx, fractions, peak_state,
+                                          probe_steps=probe_steps, lr=lr)})
 
 
 # ---------------------------------------------------------------------------

@@ -26,6 +26,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from .. import obs
 from ..dcsim import env as E
 from . import networks as nets
 from .game import GameContext, SolveResult, player_rewards, uniform_fractions
@@ -164,6 +165,8 @@ def _one_player_round(key, agent, env, tau, objective, peak_state, joint, i, mod
 
     k_ppo, k_cand = jax.random.split(key)
     agent, info = ppo_improve(k_ppo, agent, state0_fn, state_of, reward_of, ppo_cfg)
+    obs.tap("gt_drl/ppo", {"player": i, "actor_loss": info["actor_loss"],
+                           "mean_reward": info["mean_reward"]})
     # Best response over the learned policy's support: the stochastic policy
     # proposes candidates (greedy mean + samples), the player adopts whichever
     # proposal minimizes its own objective, never regressing below its current
@@ -278,6 +281,7 @@ def solve_epoch(
 
     def one_round(carry, key_r):
         agents, joint, best_joint, best_val = carry
+        prev_joint = joint
         k1, k2 = jax.random.split(key_r)
         agents, joint = half_update(agents, joint, k1, 0, ctx, peak_state, cfg)
         agents, joint = half_update(agents, joint, k2, 1, ctx, peak_state, cfg)
@@ -285,6 +289,9 @@ def solve_epoch(
         better = val < best_val
         best_joint = jnp.where(better, joint, best_joint)
         best_val = jnp.where(better, val, best_val)
+        obs.tap("gt_drl/round",
+                {"value": val, "best": best_val,
+                 "delta": jnp.max(jnp.abs(joint - prev_joint))})
         return (agents, joint, best_joint, best_val), val
 
     val0 = jnp.sum(player_rewards(ctx, joint0, peak_state))

@@ -34,6 +34,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from .. import obs
 from ..dcsim import env as E
 from . import ddpg, force_directed, genetic, gt_drl, nash, ppo_joint
 from . import game
@@ -62,9 +63,12 @@ game.register_technique(
 
 
 @functools.lru_cache(maxsize=None)
-def _stateful_solve(name: str, cfg) -> Callable:
-    """One jitted epoch solver per (technique, config), shared across
-    scheduler instances (gt-drl and any registered stateful technique)."""
+def _stateful_solve(name: str, cfg, taps: frozenset = frozenset()) -> Callable:
+    """One jitted epoch solver per (technique, config, obs tap set), shared
+    across scheduler instances (gt-drl and any registered stateful
+    technique). ``taps`` keys the cache so a tapped loop-engine solver is a
+    separate artifact from the taps-off one (same rule as the compiled
+    engines in ``experiment``)."""
     t = game.get_technique(name)
     cfg = t.resolve_cfg(cfg)
     step = t.step
@@ -77,14 +81,20 @@ game.on_technique_change(_stateful_solve.cache_clear)
 
 class StatefulScheduler:
     """Stateful wrapper for the loop engine: holds the solver carry (e.g.
-    per-player agents) across epochs, advancing it each ``solve_epoch``."""
+    per-player agents) across epochs, advancing it each ``solve_epoch``.
+
+    The ambient obs tap set at construction is pinned for the scheduler's
+    lifetime: every dispatch traces under exactly that set, so the jitted
+    artifact always matches its cache key."""
 
     def __init__(self, name: str, state0, cfg=None):
         self.state = state0
-        self._solve = _stateful_solve(name, cfg)
+        self._taps = obs.active_taps()
+        self._solve = _stateful_solve(name, cfg, self._taps)
 
     def solve_epoch(self, key, ctx: GameContext, peak_state) -> SolveResult:
-        self.state, res = self._solve(key, self.state, ctx, peak_state)
+        with obs.tracing(self._taps):
+            self.state, res = self._solve(key, self.state, ctx, peak_state)
         return res
 
 
@@ -257,7 +267,12 @@ def run_day(
 
 
 def _stats(vals, curves) -> Dict[str, Any]:
-    """mean ± stderr of daily totals + the mean per-epoch curve."""
+    """mean ± stderr of daily totals + the mean per-epoch curve.
+
+    The ``n > 1`` guard is load-bearing: a single daily total would put the
+    ``ddof=1`` std (NaN at n=1) over ``sqrt(n)`` and poison every downstream
+    mean±stderr table — single-run protocols report stderr 0.0 instead
+    (regression-pinned in tests/test_obs.py)."""
     vals = np.asarray(vals, dtype=float)
     curves = np.asarray(curves, dtype=float)
     n = vals.shape[0]
@@ -279,6 +294,7 @@ def compare_techniques(
     cfg_overrides: Optional[Dict[str, Any]] = None,
     routed: bool = False,
     shard: bool = False,
+    record: Any = None,
 ) -> Dict[str, Dict[str, Any]]:
     """The paper's protocol: several runs (one env per resampled arrival
     pattern), mean±stderr of daily totals. The ranked metric is daily carbon
@@ -295,6 +311,11 @@ def compare_techniques(
     so both engines agree within float32 tolerance. ``cfg_overrides`` maps
     technique -> config. Any technique registered via
     ``game.register_technique`` can appear in ``techniques``.
+
+    ``record`` (True, or a JSONL path) appends one spec-keyed RunRecord per
+    technique — the ranked mean±stderr, its mean convergence curve, and the
+    batched engine's compile/dispatch spans — so the comparison table is a
+    regenerable artifact (``repro.obs.report`` renders the scoreboard).
     """
     if isinstance(envs, E.EnvParams):
         envs = [envs]
@@ -309,6 +330,21 @@ def compare_techniques(
     def deployed_state(tdef, cfg):
         return tdef.init_state(jax.random.PRNGKey(seed0 + 999), envs[0],
                                objective, cfg, routed, True)
+
+    def record_one(t, cfg):
+        from . import experiment as X
+        spec = X.ExperimentSpec(technique=t, objective=objective,
+                                engine=engine if engine == "loop" else "batched",
+                                routed=routed, hours=hours, cfg=cfg)
+        spans = (None if engine == "loop"
+                 else obs.engine_stat(X._engine_key(spec, shard=shard)))
+        rec = obs.make_record(
+            spec, kind="compare", curves={metric: out[t]["curve_mean"]},
+            engine_spans=spans,
+            extra={"metric": metric, "mean": out[t]["mean"],
+                   "stderr": out[t]["stderr"], "runs": len(envs),
+                   "totals": {metric: out[t]["mean"]}})
+        obs.write_record(rec, record if isinstance(record, str) else None)
 
     if engine == "loop":
         for t in techniques:
@@ -327,6 +363,8 @@ def compare_techniques(
                 vals.append(res["totals"][metric])
                 curves.append([e[metric] for e in res["per_epoch"]])
             out[t] = _stats(vals, curves)
+            if record:
+                record_one(t, cfg)
         return out
 
     env_b = E.stack_envs(envs)
@@ -338,4 +376,6 @@ def compare_techniques(
                                cfg_override=cfg, solver_state0=state0,
                                routed=routed, shard=shard)
         out[t] = _stats(res["totals"][metric], res["per_epoch"][metric])
+        if record:
+            record_one(t, cfg)
     return out

@@ -1,0 +1,66 @@
+"""``repro.obs`` — telemetry for the compiled evaluation engines.
+
+Three pieces, one invariant: **zero cost when disabled**.
+
+- **Taps** (``repro.obs.tap``): named emission points inside jitted scan
+  bodies (``obs.tap(name, value)``). Disabled taps compile to nothing —
+  the taps-off engines are bit-for-bit the pre-obs artifacts; enabled taps
+  ship per-epoch solver diagnostics and per-hour physical signals to a
+  host ring buffer via ``jax.debug.callback``. Built-in tap points:
+
+  ========================  ===================================================
+  name                      payload (per event)
+  ========================  ===================================================
+  ``engine/hour``           tau, carbon_kg, cost_usd, sla_miss_cost_usd,
+                            latency_ms, grid_power_w — one event per epoch
+  ``game/nash_residual``    tau, residual — the Nash-gap probe (computed
+                            only when tapped)
+  ``gt_drl/round``          value, best, delta — per best-response round
+  ``gt_drl/ppo``            player, actor_loss, mean_reward — per PPO
+                            improve call
+  ========================  ===================================================
+
+- **Spans** (``repro.obs.spans``): compile-cache accounting for the
+  spec-keyed engine cache — hits/misses/evictions, build and
+  first-dispatch (≈ compile) wall time, per-dispatch spans — queryable via
+  ``obs.cache_stats()``; plus ``obs.span(name)`` for ad-hoc regions (the
+  benchmark harness' timer) and ``obs.profile(label)`` for
+  ``jax.profiler`` traces.
+
+- **Records** (``repro.obs.records`` / ``repro.obs.report``): ``run(spec,
+  envs, record=True)`` (also ``sweep``/``compare_techniques``) appends a
+  spec-keyed JSONL ``RunRecord`` (git SHA, jax/device info, totals,
+  convergence curves, timing spans) under ``runs/``; ``python -m
+  repro.obs`` renders the committed scoreboard from them.
+
+Typical use::
+
+    from repro import obs
+    from repro.core import ExperimentSpec, run
+
+    with obs.taps("engine/hour"), obs.capture() as buf:
+        run(ExperimentSpec(technique="fd"), env, record=True)
+    buf.series("engine/hour", "carbon_kg")   # (24,) convergence curve
+    obs.cache_stats()                        # compile/dispatch accounting
+"""
+from . import records, report as report_mod, spans, tap as tap_mod
+from .records import (load_records, make_record, run_info, spec_fields,
+                      spec_key, write_record)
+from .report import report, sparkline
+from .spans import (Span, cache_stats, engine_key_str, engine_stat,
+                    note_bench, profile, reset_stats, span)
+from .spans import spans as all_spans
+from .tap import (TapBuffer, TapEvent, active_taps, capture, clear_events,
+                  disable_taps, enable_taps, enabled, events, ring, tap, taps,
+                  tracing)
+
+__all__ = [
+    "tap", "taps", "capture", "events", "ring", "clear_events",
+    "enable_taps", "disable_taps", "enabled", "active_taps", "tracing",
+    "TapBuffer", "TapEvent",
+    "span", "all_spans", "Span", "cache_stats", "engine_stat",
+    "engine_key_str", "reset_stats", "note_bench", "profile",
+    "make_record", "write_record", "load_records", "run_info",
+    "spec_fields", "spec_key",
+    "report", "sparkline",
+]

@@ -1,0 +1,5 @@
+"""``python -m repro.obs`` — render the scoreboard from JSONL run records
+(the runpy-clean alias for ``repro.obs.report.main``)."""
+from .report import main
+
+main()

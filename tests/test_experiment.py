@@ -110,6 +110,50 @@ def test_compile_cache_shared_across_entry_points():
     assert X.compiled_engine(spec) is X.compiled_engine(spec.replace(seed=9))
 
 
+def test_non_static_fields_never_key_a_new_compile():
+    """Every field outside ``static_key()`` (seed, seeds, days, pretrain) is
+    a runtime input: varying them must hit the SAME compiled artifact, and
+    the obs accounting must agree (one miss total, the rest hits)."""
+    from repro import obs
+    spec = SPEC.replace(hours=3)
+    key = X._engine_key(spec)
+    before = obs.engine_stat(key) or {"misses": 0, "hits": 0}
+    fn = X.compiled_engine(spec)
+    for other in (spec.replace(seed=41), spec.replace(pretrain=False),
+                  spec.replace(seed=7, pretrain=False)):
+        assert X.compiled_engine(other) is fn
+    mspec = spec.replace(engine="month", days=2)
+    mfn = X.compiled_engine(mspec)
+    assert X.compiled_engine(mspec.replace(days=5, seed=3)) is mfn
+    # the obs ledger tells the same story: at most one fresh miss on the day
+    # key, and every non-static variation above counted as a hit
+    st = obs.engine_stat(key)
+    assert st["misses"] <= before["misses"] + 1
+    assert st["hits"] >= before["hits"] + 3
+
+
+def test_overwrite_eviction_lands_in_cache_stats():
+    """``register_technique(overwrite=True)`` clears the compile caches; the
+    obs accounting must surface that as evictions + a fresh miss, not keep
+    counting hits against a dead artifact."""
+    from repro import obs
+    register_technique("evict-test", _uniform_solve)
+    try:
+        spec = ExperimentSpec(technique="evict-test", hours=2)
+        run(spec, ENV)
+        key = X._engine_key(spec)
+        assert obs.engine_stat(key)["misses"] == 1
+        ev0 = obs.cache_stats()["evictions"]
+        register_technique("evict-test", _uniform_solve, overwrite=True)
+        assert obs.cache_stats()["evictions"] > ev0
+        assert obs.engine_stat(key)["evicted"]
+        run(spec, ENV)  # recompiles: the ledger shows a second miss
+        assert obs.engine_stat(key)["misses"] == 2
+    finally:
+        from repro.core import unregister_technique
+        unregister_technique("evict-test")
+
+
 # ---------------------------------------------------------------------------
 # severity sweeps
 # ---------------------------------------------------------------------------

@@ -3,10 +3,12 @@ PY ?= python
 export PYTHONPATH := src$(if $(PYTHONPATH),:$(PYTHONPATH))
 
 .PHONY: check bench bench-quick bench-scenarios bench-smoke sweep-smoke \
-        obs-smoke scoreboard
+        obs-smoke faults-smoke scoreboard
 
+# PYTEST_ARGS lets CI add plugins the container image lacks
+# (e.g. PYTEST_ARGS="--timeout=300" with pytest-timeout installed)
 check:
-	$(PY) -m pytest -x -q
+	$(PY) -m pytest -x -q $(PYTEST_ARGS)
 
 bench:
 	$(PY) -m benchmarks.run
@@ -28,6 +30,12 @@ bench-smoke:
 # repro.obs; the full 5-technique artifact is `python examples/run_obs.py`)
 obs-smoke:
 	$(PY) examples/run_obs.py --quick
+
+# robustness smoke: a tiny FaultTrace day across failover policies plus one
+# kill/resume sweep round-trip (see repro.faults; full day via
+# `python examples/run_faults.py`)
+faults-smoke:
+	$(PY) examples/run_faults.py --quick
 
 # re-render the committed SCOREBOARD.md from the committed run records
 scoreboard:

@@ -25,6 +25,15 @@ Rows (name, us_per_call, derived):
   engine/sweep_grid           us per severity-sweep grid (ExperimentSpec
                               ``sweep``: stacked grid envs, one batched
                               compile per technique)
+  engine/day_scan_faulted     us per compiled day through the plan/execute
+                              split (realized FaultTrace + failover
+                              re-projection each hour; overhead vs the
+                              unfaulted day derived — the price of
+                              executing on the realized env)
+  engine/sweep_resume         us per journaled severity-sweep grid
+                              (chunked execution, one checkpoint per
+                              chunk; overhead vs the one-compile in-memory
+                              sweep derived — the price of crash safety)
 """
 from __future__ import annotations
 
@@ -173,8 +182,40 @@ def run(rows):
     X.sweep(sweep_spec, grid, **skw)  # warm
     with Timer() as tm:
         res_g = X.sweep(sweep_spec, grid, **skw)
+    sweep_s = tm.seconds
     n_pts = len(res_g["labels"])
-    emit(rows, "engine/sweep_grid", tm.seconds,
+    emit(rows, "engine/sweep_grid", sweep_s,
          f"points={n_pts};hours={HOURS};"
-         f"us_per_point={tm.seconds * 1e6 / n_pts:.0f};"
+         f"us_per_point={sweep_s * 1e6 / n_pts:.0f};"
          f"sla_usd_max={res_g['results']['fd']['totals']['sla_miss_cost_usd'].max():.0f}")
+
+    # -- realized faults: the plan/execute split vs the plain compiled day --
+    from repro import faults as FL
+    day_spec = X.ExperimentSpec(technique="fd", objective="cost",
+                                hours=HOURS, cfg=CFGS["fd"])
+    trace = FL.compose(FL.dc_crash(sla_env, dc=1, start=HOURS // 3,
+                                   duration=HOURS // 2),
+                       FL.wan_partition(sla_env, a=0, b=2, extra_ms=300.0))
+    X.run(day_spec, sla_env)  # warm the unfaulted artifact
+    with Timer() as tm:
+        X.run(day_spec, sla_env)
+    plain_day_s = tm.seconds
+    X.run(day_spec, sla_env, faults=trace)  # warm the faulted artifact
+    with Timer() as tm:
+        res_f = X.run(day_spec, sla_env, faults=trace)
+    emit(rows, "engine/day_scan_faulted", tm.seconds,
+         f"hours={HOURS};moved={res_f['totals']['failover_moved']:.0f};"
+         f"overhead_vs_plain={tm.seconds / max(plain_day_s, 1e-9):.2f}x")
+
+    # -- resumable sweep: journaled chunk execution vs the in-memory sweep --
+    import shutil
+    import tempfile
+    journal = tempfile.mkdtemp(prefix="bench_sweep_resume_")
+    try:
+        with Timer() as tm:
+            X.sweep(sweep_spec, grid, resume_dir=journal, **skw)
+        emit(rows, "engine/sweep_resume", tm.seconds,
+             f"points={n_pts};chunks={n_pts};"
+             f"overhead_vs_inmem={tm.seconds / max(sweep_s, 1e-9):.2f}x")
+    finally:
+        shutil.rmtree(journal, ignore_errors=True)

@@ -27,6 +27,17 @@ replaces that with:
 The legacy entry points in ``repro.core.schedulers`` are kept as thin shims
 over the spec and remain pinned bit-for-bit against their PR 2–4 outputs;
 new code should ``from repro.core import ExperimentSpec, run, sweep``.
+
+Realized faults (PR 7, ``repro.faults``): ``run(spec, envs, faults=trace)``
+threads a ``FaultTrace`` into the compiled engines as a *runtime* argument
+— solvers plan on the unfaulted env, and each hour the scan body re-projects
+the planned allocation against realized capacity (``spec.failover`` policy)
+and simulates the epoch on the realized env view, emitting
+``unserved_demand``/``failover_moved``/``degraded_sla_cost_usd`` (plus
+``fallback_hours`` from the numerical finite-guard). Faultedness joins the
+compile key, so ``faults=None`` keeps dispatching the exact pre-fault
+artifacts. ``sweep(..., resume_dir=...)`` adds chunked, journaled,
+retry-supervised grid execution (see ``repro.faults.resume``).
 """
 from __future__ import annotations
 
@@ -39,6 +50,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from .. import faults as FL
 from .. import obs
 from ..dcsim import env as E
 from . import game
@@ -46,6 +58,12 @@ from . import schedulers as SCH
 from .game import GameContext, fractions_to_ar
 
 _TOTAL_KEYS = ("carbon_kg", "cost_usd", "sla_miss_cost_usd", "violation")
+
+# degradation metrics: present (and summed into totals) only on engines
+# compiled with faults/guard — the unfaulted metric dicts never carry them,
+# which is what keeps the faults=None result dicts bit-identical
+_FAULT_KEYS = ("unserved_demand", "failover_moved", "degraded_sla_cost_usd",
+               "fallback_hours")
 
 # per-hour physical signals streamed by the "engine/hour" tap
 _TAP_HOUR_KEYS = ("carbon_kg", "cost_usd", "sla_miss_cost_usd", "latency_ms",
@@ -78,6 +96,14 @@ class ExperimentSpec:
     obs ring buffer; ``None`` defers to the ambient ``obs.taps(...)``
     context (default: everything off, and the taps-off artifacts are
     bit-for-bit the pre-obs programs).
+
+    ``failover`` picks the realized-fault re-projection policy
+    (``repro.faults.POLICIES``) — consulted only when ``run`` receives
+    ``faults=``, and normalized out of the compile key otherwise, so it is
+    free on unfaulted specs. ``guard=True`` compiles the numerical
+    finite-guard (fallback to the capacity-proportional baseline +
+    ``fallback_hours`` counter) into an *unfaulted* engine too; faulted
+    engines always guard.
     """
     technique: str = "fd"
     objective: str = "carbon"
@@ -90,6 +116,8 @@ class ExperimentSpec:
     pretrain: bool = True
     cfg: Any = None                       # solver config (frozen dataclass)
     taps: Optional[Tuple[str, ...]] = None   # obs tap patterns (None: ambient)
+    failover: str = FL.DEFAULT_POLICY     # realized-fault failover policy
+    guard: bool = False                   # finite-guard even when unfaulted
 
     def __post_init__(self):
         if self.engine not in ENGINES:
@@ -98,6 +126,9 @@ class ExperimentSpec:
         if self.objective not in E.OBJECTIVES:
             raise ValueError(f"unknown objective {self.objective!r}; "
                              f"known: {E.OBJECTIVES}")
+        if self.failover not in FL.POLICIES:
+            raise ValueError(f"unknown failover policy {self.failover!r}; "
+                             f"known: {FL.POLICIES}")
         if self.seeds is not None and not isinstance(self.seeds, tuple):
             object.__setattr__(self, "seeds", tuple(self.seeds))
         if self.taps is not None and not isinstance(self.taps, tuple):
@@ -106,10 +137,10 @@ class ExperimentSpec:
     def replace(self, **changes) -> "ExperimentSpec":
         return dataclasses.replace(self, **changes)
 
-    def static_key(self) -> Tuple[str, str, int, Any, bool]:
+    def static_key(self) -> Tuple[str, str, int, Any, bool, str, bool]:
         """The compile-relevant fields, in ``_day_core`` argument order."""
         return (self.technique, self.objective, self.hours, self.cfg,
-                self.routed)
+                self.routed, self.failover, self.guard)
 
     def effective_taps(self) -> frozenset:
         """The tap set this spec's engines compile under: the spec's own
@@ -138,12 +169,23 @@ def _solver_step(technique: str, cfg) -> Callable:
 
 @functools.lru_cache(maxsize=None)
 def _day_core(technique: str, objective: str, hours: int, cfg,
-              routed: bool = False, taps: frozenset = frozenset()) -> Callable:
-    """day(env, key, peak0, state0) -> (peak, state, metrics (hours,)-dict).
+              routed: bool = False, failover: str = FL.DEFAULT_POLICY,
+              guard: bool = False, faulted: bool = False,
+              taps: frozenset = frozenset()) -> Callable:
+    """day(env, key, peak0, state0[, trace]) -> (peak, state, metrics dict).
 
     Pure and jit/vmap-friendly; the RNG key is split exactly as the
     reference loop does, so both engines see the same per-epoch keys.
     ``routed`` plays the (S, I, D) routing game instead of the (I, D) one.
+
+    ``faulted`` cores take a fifth argument — a ``faults.FaultTrace``
+    pytree — and execute every hour through the plan/execute split: the
+    solver steps on the unfaulted ``env`` (planning), then
+    ``faults.execute_hour`` re-projects its allocation against realized
+    capacity (``failover`` policy) and simulates the epoch on the realized
+    env view. ``guard`` (implied by ``faulted``) compiles the finite-guard
+    on the solver's joint strategy. All three are trace-time flags: the
+    default core lowers to exactly the pre-fault program.
 
     ``taps`` only keys the cache: the ``obs.tap`` calls in the body check
     trace-time enablement themselves (the dispatch wrapper pins the active
@@ -151,44 +193,65 @@ def _day_core(technique: str, objective: str, hours: int, cfg,
     pre-obs program and a tapped core is a distinct artifact.
     """
     step = _solver_step(technique, cfg)
+    guard_on = guard or faulted
 
-    def day(env: E.EnvParams, key, peak0, state0):
-        def body(carry, tau):
-            key, peak, state = carry
-            key, ks = jax.random.split(key)
-            ctx = GameContext(env=env, tau=tau, objective=objective,
-                              routed=routed)
-            state, res = step(ks, state, ctx, peak)
-            game.tap_nash_residual(ctx, res.fractions, peak)
-            ar = fractions_to_ar(ctx, res.fractions)
+    def _body(env, trace, carry, tau):
+        key, peak, state = carry
+        key, ks = jax.random.split(key)
+        ctx = GameContext(env=env, tau=tau, objective=objective,
+                          routed=routed)
+        state, res = step(ks, state, ctx, peak)
+        game.tap_nash_residual(ctx, res.fractions, peak)
+        fr = res.fractions
+        if guard_on:
+            fr, fell_back = FL.guard_fractions(env, tau, fr)
+        ar = fractions_to_ar(ctx, fr)
+        if faulted:
+            peak, m = FL.execute_hour(env, trace, peak, ar, tau, failover)
+        else:
             peak, m = E.step_epoch(env, peak, ar, tau)
-            obs.tap("engine/hour",
-                    {"tau": tau, **{k: m[k] for k in _TAP_HOUR_KEYS}})
-            return (key, peak, state), m
+        if guard_on:
+            m = {**m, "fallback_hours": fell_back}
+        tap_keys = _TAP_HOUR_KEYS + tuple(k for k in _FAULT_KEYS if k in m)
+        obs.tap("engine/hour",
+                {"tau": tau, **{k: m[k] for k in tap_keys}})
+        return (key, peak, state), m
 
-        (_, peak, state), ms = jax.lax.scan(
-            body, (key, peak0, state0), jnp.arange(hours, dtype=jnp.int32))
-        return peak, state, ms
+    taus = functools.partial(jnp.arange, dtype=jnp.int32)
+    if faulted:
+        def day(env: E.EnvParams, key, peak0, state0, trace):
+            (_, peak, state), ms = jax.lax.scan(
+                functools.partial(_body, env, trace), (key, peak0, state0),
+                taus(hours))
+            return peak, state, ms
+    else:
+        def day(env: E.EnvParams, key, peak0, state0):
+            (_, peak, state), ms = jax.lax.scan(
+                functools.partial(_body, env, None), (key, peak0, state0),
+                taus(hours))
+            return peak, state, ms
 
     return day
 
 
-def _sharded_batch(core: Callable) -> Callable:
+def _sharded_batch(core: Callable, faulted: bool = False) -> Callable:
     """Shard the batched day engine's env axis across all local devices.
 
     ``shard_map`` over a 1-axis device mesh: env rows and their RNG keys
-    split by shard, (peak0, state0) replicated — each device runs the
-    plain vmapped day core on its slice, so a 1-device mesh runs the
-    EXACT unsharded program and N devices evaluate N env shards in
-    parallel with zero cross-device collectives.
+    split by shard, (peak0, state0) — and the fault trace, when present —
+    replicated; each device runs the plain vmapped day core on its slice,
+    so a 1-device mesh runs the EXACT unsharded program and N devices
+    evaluate N env shards in parallel with zero cross-device collectives.
     """
     from jax.experimental.shard_map import shard_map
     from jax.sharding import Mesh, PartitionSpec as P
 
     mesh = Mesh(np.asarray(jax.devices()), ("env",))
-    batched = jax.vmap(core, in_axes=(0, 0, None, None))
+    axes = (0, 0, None, None) + ((None,) if faulted else ())
+    specs = (P("env"), P("env"), P(), P()) + ((P(),) if faulted else ())
+    batched = jax.vmap(core, in_axes=axes)
     fn = shard_map(batched, mesh=mesh,
-                   in_specs=(P("env"), P("env"), P(), P()),
+                   in_specs=specs,
                    out_specs=(P("env"), P("env"), P("env")),
                    check_rep=False)
     return jax.jit(fn)
@@ -199,20 +262,31 @@ _KINDS = ("day", "batched", "sharded", "month")
 
 @functools.lru_cache(maxsize=None)
 def _compiled_raw(kind: str, technique: str, objective: str, hours: int, cfg,
-                  routed: bool, taps: frozenset) -> Callable:
+                  routed: bool, failover: str, guard: bool, faulted: bool,
+                  taps: frozenset) -> Callable:
     """THE compile cache: one jitted artifact per (engine kind, spec static
-    fields, tap set), shared by ``run``/``sweep`` and every legacy shim — no
-    engine compiles per call site anymore. Artifacts come back wrapped in
-    the obs dispatch span (per-call timing + trace-time tap pinning)."""
-    key = (kind, technique, objective, hours, cfg, routed, taps)
-    core = _day_core(technique, objective, hours, cfg, routed, taps)
+    fields, failover/guard/faulted flags, tap set), shared by
+    ``run``/``sweep`` and every legacy shim — no engine compiles per call
+    site anymore. Artifacts come back wrapped in the obs dispatch span
+    (per-call timing + trace-time tap pinning)."""
+    key = (kind, technique, objective, hours, cfg, routed, failover, guard,
+           faulted, taps)
+    core = _day_core(technique, objective, hours, cfg, routed, failover,
+                     guard, faulted, taps)
     if kind == "day":
         fn = jax.jit(core)
     elif kind == "batched":
-        fn = jax.jit(jax.vmap(core, in_axes=(0, 0, None, None)))
+        axes = (0, 0, None, None) + ((None,) if faulted else ())
+        fn = jax.jit(jax.vmap(core, in_axes=axes))
     elif kind == "sharded":
-        fn = _sharded_batch(core)
+        fn = _sharded_batch(core, faulted)
     elif kind == "month":
+        if faulted:
+            raise ValueError(
+                "the month engine does not take realized faults yet: a "
+                "FaultTrace describes one 24h day, and the month scan "
+                "threads days through a second-level carry; run faulted "
+                "days through the scan/batched engines")
         def month(env_days, keys, peak0, state0):
             def body(carry, x):
                 peak, state = carry
@@ -231,10 +305,13 @@ def _compiled_raw(kind: str, technique: str, objective: str, hours: int, cfg,
 
 
 def _compiled(kind: str, technique: str, objective: str, hours: int, cfg,
-              routed: bool, taps: frozenset = frozenset()) -> Callable:
+              routed: bool, failover: str = FL.DEFAULT_POLICY,
+              guard: bool = False, faulted: bool = False,
+              taps: frozenset = frozenset()) -> Callable:
     """Front door to the compile cache: same artifact as ``_compiled_raw``
     but every lookup/build is accounted in ``obs.cache_stats()``."""
-    key = (kind, technique, objective, hours, cfg, routed, taps)
+    key = (kind, technique, objective, hours, cfg, routed, failover, guard,
+           faulted, taps)
     hit = obs.spans.engine_lookup(key)
     if hit:
         return _compiled_raw(*key)
@@ -248,19 +325,31 @@ def _compiled(kind: str, technique: str, objective: str, hours: int, cfg,
 _compiled.cache_info = _compiled_raw.cache_info
 
 
-def _engine_key(spec: ExperimentSpec, *, shard: bool = False) -> tuple:
+def _engine_key(spec: ExperimentSpec, *, shard: bool = False,
+                faulted: bool = False) -> tuple:
     """The compile-cache key ``run`` uses for this spec (also the join key
-    for ``obs.engine_stat`` / run records)."""
+    for ``obs.engine_stat`` / run records).
+
+    ``failover`` is an execute-time policy: on unfaulted lookups it is
+    normalized to the default so a spec's policy choice never forks the
+    (identical) unfaulted artifact.
+    """
     kind = {"scan": "day", "batched": "sharded" if shard else "batched",
             "month": "month"}.get(spec.engine)
     if kind is None:
         raise ValueError(f"engine {spec.engine!r} is not compiled")
-    return (kind, *spec.static_key(), spec.effective_taps())
+    technique, objective, hours, cfg, routed, failover, guard = \
+        spec.static_key()
+    if not faulted:
+        failover = FL.DEFAULT_POLICY
+    return (kind, technique, objective, hours, cfg, routed, failover, guard,
+            faulted, spec.effective_taps())
 
 
-def compiled_engine(spec: ExperimentSpec, *, shard: bool = False) -> Callable:
+def compiled_engine(spec: ExperimentSpec, *, shard: bool = False,
+                    faulted: bool = False) -> Callable:
     """The spec's compiled engine (public access to the cache)."""
-    return _compiled(*_engine_key(spec, shard=shard))
+    return _compiled(*_engine_key(spec, shard=shard, faulted=faulted))
 
 
 def _clear_compile_caches() -> None:
@@ -295,11 +384,18 @@ def _day_inputs(env, technique, objective, seed, pretrain, cfg,
     return key, t.init_state(kp, env, objective, cfg, routed, pretrain)
 
 
+def _totals_keys(present) -> Tuple[str, ...]:
+    """The result's totals keys: the invariant ``_TOTAL_KEYS`` plus any
+    degradation metrics the engine actually emitted (faulted/guarded
+    engines only — unfaulted result dicts are unchanged)."""
+    return _TOTAL_KEYS + tuple(k for k in _FAULT_KEYS if k in present)
+
+
 def _format_day(ms, hours: int, technique: str, objective: str) -> Dict[str, Any]:
     """Stacked (hours,) metric arrays -> the run_day result dict."""
     host = {k: np.asarray(v).astype(float).tolist() for k, v in ms.items()}
     per_epoch = [{**{k: host[k][t] for k in host}, "tau": t} for t in range(hours)]
-    totals = {k: 0.0 for k in _TOTAL_KEYS}
+    totals = {k: 0.0 for k in _totals_keys(host)}
     for row in per_epoch:
         for k in totals:
             totals[k] += row[k]
@@ -320,6 +416,7 @@ def run(
     solver: Optional[Callable] = None,
     shard: bool = False,
     record: Any = None,
+    faults: Any = None,
 ) -> Dict[str, Any]:
     """Run one experiment. ``envs`` is a single EnvParams for the scan/loop
     engines, one-or-many (list or stacked) for batched, and one/list/stacked
@@ -330,6 +427,15 @@ def run(
     only); ``shard=True`` (batched only) shards the env axis across devices
     via ``shard_map`` — identical results, the batch is padded to the device
     count and the padded rows' metrics dropped.
+
+    ``faults`` (a ``repro.faults.FaultTrace``) switches the engine to the
+    plan/execute split: solvers plan on the unfaulted ``envs`` while every
+    hour executes against the trace's realized env view under
+    ``spec.failover``, adding ``unserved_demand`` / ``failover_moved`` /
+    ``degraded_sla_cost_usd`` / ``fallback_hours`` to the metrics. The
+    batched engine shares one trace across all env rows (the same day of
+    trouble hits every scenario). ``faults=None`` (default) dispatches the
+    exact unfaulted artifacts.
 
     ``record`` (True, or a JSONL path) appends a spec-keyed ``RunRecord``
     — totals, convergence curves, engine timing spans, git/jax provenance —
@@ -352,44 +458,55 @@ def run(
         raise ValueError("the loop engine derives solver state from the "
                          "seed or a prebuilt solver=; solver_state0 is "
                          "scan/batched/month-only")
+    if faults is not None and spec.engine == "month":
+        raise ValueError("the month engine does not take realized faults "
+                         "yet (a FaultTrace describes one day); run faulted "
+                         "days through scan/loop/batched")
     game.get_technique(spec.technique)  # fail fast with the known-names list
     if spec.engine == "scan":
-        result = _run_scan(spec, envs, peak_state0, solver_state0)
+        result = _run_scan(spec, envs, peak_state0, solver_state0, faults)
     elif spec.engine == "loop":
-        result = _run_loop(spec, envs, peak_state0, solver)
+        result = _run_loop(spec, envs, peak_state0, solver, faults)
     elif spec.engine == "batched":
-        result = _run_batched(spec, envs, solver_state0, shard)
+        result = _run_batched(spec, envs, solver_state0, shard, faults)
     else:
         result = _run_month(spec, envs, peak_state0, solver_state0)
     if record:
-        _record_run(spec, result, shard=shard, path=record)
+        _record_run(spec, result, shard=shard, path=record,
+                    faulted=faults is not None)
     return result
 
 
 def _record_run(spec: ExperimentSpec, result: Dict[str, Any], *,
                 shard: bool = False, path: Any = None,
-                kind: str = "run") -> str:
+                kind: str = "run", faulted: bool = False) -> str:
     """Emit one JSONL RunRecord for a finished ``run`` result."""
     engine_spans = (None if spec.engine == "loop"
-                    else obs.engine_stat(_engine_key(spec, shard=shard)))
+                    else obs.engine_stat(_engine_key(spec, shard=shard,
+                                                     faulted=faulted)))
     rec = obs.make_record(spec, result, kind=kind, engine_spans=engine_spans)
     return obs.write_record(rec, path if isinstance(path, str) else None)
 
 
-def _run_scan(spec, env, peak_state0, solver_state0):
+def _run_scan(spec, env, peak_state0, solver_state0, faults=None):
     key, state0 = _day_inputs(env, spec.technique, spec.objective, spec.seed,
                               spec.pretrain, spec.cfg, solver_state0,
                               spec.routed)
     peak0 = (peak_state0 if peak_state0 is not None
              else jnp.zeros((E.num_dcs(env),)))
-    day = _compiled(*_engine_key(spec))
-    _, _, ms = day(env, key, peak0, state0)
+    day = _compiled(*_engine_key(spec, faulted=faults is not None))
+    if faults is None:
+        _, _, ms = day(env, key, peak0, state0)
+    else:
+        _, _, ms = day(env, key, peak0, state0, faults)
     return _format_day(ms, spec.hours, spec.technique, spec.objective)
 
 
-def _run_loop(spec, env, peak_state0, solver):
-    """The seed Python hour-loop, kept as the parity reference. Metrics
-    accumulate on-device and transfer with ONE ``jax.device_get``."""
+def _run_loop(spec, env, peak_state0, solver, faults=None):
+    """The seed Python hour-loop, kept as the parity reference (including
+    for the faulted plan/execute split — the same ``faults`` helpers run
+    eagerly here). Metrics accumulate on-device and transfer with ONE
+    ``jax.device_get``."""
     key = jax.random.PRNGKey(spec.seed)
     _, key = jax.random.split(key)
     if solver is None:
@@ -408,6 +525,7 @@ def _run_loop(spec, env, peak_state0, solver):
                 **({"cfg": spec.cfg} if spec.cfg is not None else {}),
             )
     d = E.num_dcs(env)
+    guard_on = spec.guard or faults is not None
     peak = peak_state0 if peak_state0 is not None else jnp.zeros((d,))
     epoch_metrics: List[Dict[str, jnp.ndarray]] = []
     for tau in range(spec.hours):
@@ -415,11 +533,21 @@ def _run_loop(spec, env, peak_state0, solver):
         ctx = GameContext(env=env, tau=jnp.int32(tau), objective=spec.objective,
                           routed=spec.routed)
         res = solver(ks, ctx, peak)
-        ar = fractions_to_ar(ctx, res.fractions)
-        peak, m = E.step_epoch(env, peak, ar, jnp.int32(tau))
+        fr = res.fractions
+        if guard_on:
+            fr, fell_back = FL.guard_fractions(env, jnp.int32(tau), fr)
+        ar = fractions_to_ar(ctx, fr)
+        if faults is None:
+            peak, m = E.step_epoch(env, peak, ar, jnp.int32(tau))
+        else:
+            peak, m = FL.execute_hour(env, faults, peak, ar, jnp.int32(tau),
+                                      spec.failover)
+        if guard_on:
+            m = {**m, "fallback_hours": fell_back}
         epoch_metrics.append(m)  # stays on device; no per-epoch host sync
     per_epoch: List[Dict[str, float]] = []
-    totals = {k: 0.0 for k in _TOTAL_KEYS}
+    totals = {k: 0.0
+              for k in _totals_keys(epoch_metrics[0] if epoch_metrics else ())}
     for tau, m in enumerate(jax.device_get(epoch_metrics)):  # ONE transfer
         row = {k: float(v) for k, v in m.items()}
         row["tau"] = tau
@@ -430,7 +558,7 @@ def _run_loop(spec, env, peak_state0, solver):
             "technique": spec.technique, "objective": spec.objective}
 
 
-def _run_batched(spec, envs, solver_state0, shard):
+def _run_batched(spec, envs, solver_state0, shard, faults=None):
     if isinstance(envs, E.EnvParams) and envs.er.ndim == 2:
         envs = [envs]  # single env == batch of one (compare_techniques parity)
     if isinstance(envs, E.EnvParams):
@@ -451,21 +579,23 @@ def _run_batched(spec, envs, solver_state0, shard):
                             spec.pretrain, spec.cfg, solver_state0, spec.routed)
     peak0 = jnp.zeros((E.num_dcs(env0),))
 
+    faulted = faults is not None
+    trace = (faults,) if faulted else ()  # one trace, replicated over rows
     if not shard:
-        batch = _compiled(*_engine_key(spec))
-        _, _, ms = batch(env_b, keys, peak0, state0)
+        batch = _compiled(*_engine_key(spec, faulted=faulted))
+        _, _, ms = batch(env_b, keys, peak0, state0, *trace)
     else:
         pad = (-n) % jax.device_count()
         if pad:
             env_b = E.pad_env_batch(env_b, n + pad)
             keys = jnp.concatenate(
                 [keys, jnp.broadcast_to(keys[-1:], (pad,) + keys.shape[1:])])
-        batch = _compiled(*_engine_key(spec, shard=True))
-        _, _, ms = batch(env_b, keys, peak0, state0)
+        batch = _compiled(*_engine_key(spec, shard=True, faulted=faulted))
+        _, _, ms = batch(env_b, keys, peak0, state0, *trace)
         if pad:
             ms = {k: v[:n] for k, v in ms.items()}
     out = {k: np.asarray(v) for k, v in ms.items()}  # (n, hours) each
-    totals = {k: out[k].sum(axis=1) for k in _TOTAL_KEYS}
+    totals = {k: out[k].sum(axis=1) for k in _totals_keys(out)}
     return {"totals": totals, "per_epoch": out, "technique": spec.technique,
             "objective": spec.objective, "seeds": seeds}
 
@@ -518,6 +648,12 @@ def sweep(
     cfg_overrides: Optional[Mapping[str, Any]] = None,
     shard: bool = False,
     record: Any = None,
+    faults: Any = None,
+    resume_dir: Optional[str] = None,
+    chunk_points: Optional[int] = None,
+    max_retries: int = 2,
+    backoff_s: float = 0.25,
+    point_timeout_s: Optional[float] = None,
 ) -> Dict[str, Any]:
     """Severity sweep: the cartesian ``grid`` of scenario-transform
     parameters expands into one stacked env batch, and every technique runs
@@ -531,7 +667,20 @@ def sweep(
     ``sla_tighten`` row so misses are priced. Every point runs with
     ``spec.seed``'s RNG stream, so severity is the only variable along a
     curve. ``cfg_overrides`` maps technique -> solver config; ``spec.cfg``
-    covers ``spec.technique`` itself, other techniques default.
+    covers ``spec.technique`` itself, other techniques default. ``faults``
+    (a ``repro.faults.FaultTrace``) executes every grid point through the
+    realized plan/execute split under ``spec.failover``.
+
+    ``resume_dir`` switches to resumable execution: the grid runs in chunks
+    of ``chunk_points`` grid points (default 1) per technique, each
+    completed chunk journaled atomically under ``resume_dir`` (see
+    ``repro.faults.SweepJournal``). A sweep killed mid-grid re-runs with
+    the same arguments and recomputes ONLY the missing chunks; a chunk that
+    raises is retried up to ``max_retries`` times with exponential backoff
+    (``backoff_s * 2**k``); ``point_timeout_s`` bounds each chunk's wall
+    time (a timed-out chunk fails into the retry path). The result gains a
+    ``"resume"`` meta block (journal dir, chunks restored vs computed,
+    retries, straggler chunks).
 
     Returns ``{"points": [{name: params}], "labels": [...], "results":
     {technique: {"totals": {k: (P,)}, "per_epoch": {k: (P, hours)}}}}`` —
@@ -543,30 +692,137 @@ def sweep(
     base_env = base_env if base_env is not None else E.build_env(4, seed=0)
     points, rows = S.build_grid(base_env, grid, base=base_scenarios)
     labels = [lbl for lbl, _ in rows]
-    env_b = E.stack_envs([env for _, env in rows])
+    envs = [env for _, env in rows]
     n = len(rows)
     techniques = tuple(techniques) if techniques else (spec.technique,)
     overrides = dict(cfg_overrides or {})
 
-    results: Dict[str, Dict[str, Any]] = {}
-    for t in techniques:
+    def point_spec(t, n_pts):
         cfg = overrides.get(t, spec.cfg if t == spec.technique else None)
-        pspec = spec.replace(technique=t, cfg=cfg, engine="batched",
-                             seeds=(spec.seed,) * n)
-        res = _run_batched(pspec, env_b, None, shard)
-        results[t] = {"totals": res["totals"], "per_epoch": res["per_epoch"]}
-        if record:
+        return spec.replace(technique=t, cfg=cfg, engine="batched",
+                            seeds=(spec.seed,) * n_pts)
+
+    if resume_dir is not None:
+        results, resume_meta = _sweep_resumable(
+            point_spec, envs, techniques, labels, faults=faults,
+            shard=shard, resume_dir=resume_dir,
+            chunk_points=chunk_points or 1, max_retries=max_retries,
+            backoff_s=backoff_s, point_timeout_s=point_timeout_s)
+    else:
+        resume_meta = None
+        env_b = E.stack_envs(envs)
+        results = {}
+        for t in techniques:
+            pspec = point_spec(t, n)
+            res = _run_batched(pspec, env_b, None, shard, faults)
+            results[t] = {"totals": res["totals"],
+                          "per_epoch": res["per_epoch"]}
+    if record:
+        for t in techniques:
             # one record per technique: each grid point's daily totals form
             # the "curve" along the sweep's label axis
+            pspec = point_spec(t, n)
             rec = obs.make_record(
-                pspec, res, kind="sweep",
+                pspec, {**results[t], "technique": t,
+                        "objective": spec.objective},
+                kind="sweep",
                 curves={k: np.asarray(v, dtype=float).tolist()
-                        for k, v in res["totals"].items()},
-                engine_spans=obs.engine_stat(_engine_key(pspec, shard=shard)),
+                        for k, v in results[t]["totals"].items()},
+                engine_spans=obs.engine_stat(
+                    _engine_key(pspec, shard=shard,
+                                faulted=faults is not None)),
                 extra={"labels": labels,
                        "grid": {name: list(pts) for name, pts in grid.items()}})
             obs.write_record(rec, record if isinstance(record, str) else None)
-    return {"grid": {name: list(pts) for name, pts in grid.items()},
-            "points": points, "labels": labels, "results": results,
-            "objective": spec.objective, "hours": spec.hours,
-            "routed": spec.routed, "techniques": list(techniques)}
+    out = {"grid": {name: list(pts) for name, pts in grid.items()},
+           "points": points, "labels": labels, "results": results,
+           "objective": spec.objective, "hours": spec.hours,
+           "routed": spec.routed, "techniques": list(techniques)}
+    if resume_meta is not None:
+        out["resume"] = resume_meta
+    return out
+
+
+def _sweep_resumable(point_spec, envs, techniques, labels, *, faults, shard,
+                     resume_dir, chunk_points, max_retries, backoff_s,
+                     point_timeout_s):
+    """The journaled chunk-at-a-time sweep path (see ``sweep``'s docstring).
+
+    Execution plan: techniques in order, each technique's grid points in
+    chunks of ``chunk_points``; the global chunk index is the journal step.
+    Chunks run strictly in order, so the journal is always a prefix of the
+    plan and ``SweepJournal.next_step()`` is the resume frontier. The
+    supervisor is ``distributed.fault_tolerance.run_with_retries`` — a
+    raising chunk is retried with exponential backoff from the frontier;
+    ``HeartbeatMonitor`` turns per-chunk wall times into straggler reports.
+    """
+    import hashlib
+    import time as _time
+
+    from ..distributed import fault_tolerance as FT
+
+    n = len(envs)
+    chunks = [(start, min(start + chunk_points, n))
+              for start in range(0, n, chunk_points)]
+    plan = [(t, start, end) for t in techniques for start, end in chunks]
+    sig_spec = point_spec(techniques[0], 1)
+    sig = hashlib.sha256(repr((
+        tuple(labels), tuple(techniques), chunk_points,
+        sig_spec.objective, sig_spec.hours, sig_spec.routed,
+        sig_spec.failover, sig_spec.guard, sig_spec.seed,
+        faults is not None,
+    )).encode()).hexdigest()[:16]
+    journal = FL.SweepJournal(resume_dir, sig)
+    monitor = FT.HeartbeatMonitor(num_workers=len(plan),
+                                  window=max(len(plan), 1))
+
+    restored_steps = [s for s in journal.completed_steps() if s < len(plan)]
+    computed_steps: List[int] = []
+    pending: Dict[int, Dict[str, Any]] = {}
+
+    def step_fn(step):
+        FL.check_kill_switch()
+        t, start, end = plan[step]
+        pspec = point_spec(t, end - start)
+        env_b = E.stack_envs(envs[start:end])
+        t0 = _time.perf_counter()
+        res = FL.call_with_timeout(
+            lambda: _run_batched(pspec, env_b, None, shard, faults),
+            point_timeout_s, label=f"chunk {step} ({t}[{start}:{end}])")
+        monitor.record(step, _time.perf_counter() - t0)
+        pending[step] = {"totals": {k: np.asarray(v)
+                                    for k, v in res["totals"].items()},
+                         "per_epoch": {k: np.asarray(v)
+                                       for k, v in res["per_epoch"].items()}}
+        computed_steps.append(step)
+
+    def save_fn(step_after):
+        step = step_after - 1
+        if step in pending:  # journal the chunk that just completed
+            t, start, end = plan[step]
+            journal.mark(step, pending.pop(step),
+                         meta={"technique": t, "start": start, "end": end})
+
+    events = FT.run_with_retries(
+        step_fn, total_steps=len(plan), save_every=1, save_fn=save_fn,
+        restore_fn=journal.next_step,
+        policy=FT.FailurePolicy(max_restarts=max_retries, elastic=False),
+        retry_on=(Exception,), backoff_s=backoff_s)
+
+    results: Dict[str, Dict[str, Any]] = {}
+    for step, (t, start, end) in enumerate(plan):
+        part = journal.load(step)
+        node = results.setdefault(t, {"totals": {}, "per_epoch": {}})
+        for sect in ("totals", "per_epoch"):
+            for k, v in part[sect].items():
+                node[sect].setdefault(k, []).append(np.asarray(v))
+    for t in results:
+        for sect in ("totals", "per_epoch"):
+            results[t][sect] = {k: np.concatenate(v)
+                                for k, v in results[t][sect].items()}
+    meta = {"journal": resume_dir, "signature": sig, "chunks": len(plan),
+            "chunk_points": chunk_points, "restored": len(restored_steps),
+            "computed": len(computed_steps), "retries": events["restarts"],
+            "stragglers": [{"chunk": s.worker, "ratio": float(s.ratio)}
+                           for s in monitor.stragglers()]}
+    return results, meta

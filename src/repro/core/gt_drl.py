@@ -276,29 +276,45 @@ def solve_epoch(
     cfg: GTDRLConfig,
     init_fracs: Optional[jnp.ndarray] = None,
 ) -> Tuple[AgentState, SolveResult]:
-    """Run the game for one epoch: rounds × (red half, black half)."""
+    """Run the game for one epoch: rounds × (red half, black half).
+
+    Each best-response round is divergence-checked: a round whose joint
+    strategy or game value goes non-finite (an exploding PPO update) is
+    rewound — agents and joint revert to the previous iterate, the round is
+    counted in ``info["diverged_rounds"]``, and the game keeps playing from
+    the last healthy state instead of poisoning every later round (and the
+    epoch's best) with NaNs. Finite trajectories are bit-for-bit unchanged:
+    the rewind is a ``jnp.where`` select that always picks the new iterate.
+    """
     joint0 = init_fracs if init_fracs is not None else uniform_fractions(ctx)
 
     def one_round(carry, key_r):
-        agents, joint, best_joint, best_val = carry
-        prev_joint = joint
+        agents, joint, best_joint, best_val, diverged = carry
+        prev_agents, prev_joint = agents, joint
         k1, k2 = jax.random.split(key_r)
         agents, joint = half_update(agents, joint, k1, 0, ctx, peak_state, cfg)
         agents, joint = half_update(agents, joint, k2, 1, ctx, peak_state, cfg)
         val = jnp.sum(player_rewards(ctx, joint, peak_state))
-        better = val < best_val
+        ok = jnp.all(jnp.isfinite(joint)) & jnp.isfinite(val)
+        agents = jax.tree_util.tree_map(
+            lambda new, old: jnp.where(ok, new, old), agents, prev_agents)
+        joint = jnp.where(ok, joint, prev_joint)
+        diverged = diverged + jnp.where(ok, 0, 1).astype(jnp.int32)
+        better = ok & (val < best_val)
         best_joint = jnp.where(better, joint, best_joint)
         best_val = jnp.where(better, val, best_val)
         obs.tap("gt_drl/round",
                 {"value": val, "best": best_val,
                  "delta": jnp.max(jnp.abs(joint - prev_joint))})
-        return (agents, joint, best_joint, best_val), val
+        return (agents, joint, best_joint, best_val, diverged), val
 
     val0 = jnp.sum(player_rewards(ctx, joint0, peak_state))
-    carry0 = (agents, joint0, joint0, val0)
-    (agents, joint, best_joint, best_val), vals = jax.lax.scan(
+    carry0 = (agents, joint0, joint0, val0, jnp.int32(0))
+    (agents, joint, best_joint, best_val, diverged), vals = jax.lax.scan(
         one_round, carry0, jax.random.split(key, cfg.rounds))
-    return agents, SolveResult(best_joint, {"round_values": vals, "best": best_val})
+    return agents, SolveResult(best_joint,
+                               {"round_values": vals, "best": best_val,
+                                "diverged_rounds": diverged})
 
 
 def deploy(key, env: E.EnvParams, objective: str,

@@ -407,8 +407,17 @@ def latency_ms(env: EnvParams, ar: jnp.ndarray, tau) -> jnp.ndarray:
 
     ``avail`` cancels out of the zero-load service share (nodes and rate
     curtail together) and enters through rho against effective capacity.
+
+    A fully-dark DC (``avail == 0``, e.g. a realized crash hour) has zero
+    effective capacity, so its naive rho is 0/eps — an idle-*fast* server
+    that would under-price any allocation still pointing at it. It is
+    pinned to saturation instead: the queue factor clamps (finite), the
+    miss probability goes to ~1, and residual mass on a dead DC pays full
+    SLA freight. Feasible allocations place nothing there, so their
+    latency/SLA numbers are unchanged (both are allocation-weighted).
     """
     rho = jnp.sum(ar / jnp.maximum(capacity_at(env, tau), 1e-9), axis=0)
+    rho = jnp.where(env.avail[:, tau] > 0.0, rho, 1.0)
     return latency.expected_latency_ms(env.er, env.nn_total, rho, env.rtt)
 
 
@@ -445,6 +454,8 @@ def latency_ms_routed(env: EnvParams, ar: jnp.ndarray, tau) -> jnp.ndarray:
     if ar.ndim == 3:
         ar = jnp.sum(ar, axis=0)
     rho = jnp.sum(ar / jnp.maximum(capacity_at(env, tau), 1e-9), axis=0)
+    # dark DC == saturated, not idle-fast (see latency_ms)
+    rho = jnp.where(env.avail[:, tau] > 0.0, rho, 1.0)
     return latency.expected_latency_ms_routed(env.er, env.nn_total, rho,
                                               source_rtt(env))
 

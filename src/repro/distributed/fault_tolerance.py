@@ -102,9 +102,18 @@ def run_with_retries(
     restore_fn: Callable[[], int],
     policy: FailurePolicy = FailurePolicy(),
     on_event: Optional[Callable[[str, int], None]] = None,
+    retry_on: Tuple[type, ...] = (SimulatedFailure,),
+    backoff_s: float = 0.0,
+    sleep_fn: Callable[[float], None] = time.sleep,
 ) -> Dict[str, int]:
     """Supervisor: drive ``step_fn(step)`` to ``total_steps`` with
-    checkpoint/restart on failure. Returns counters for the tests."""
+    checkpoint/restart on failure. Returns counters for the tests.
+
+    ``retry_on`` is the tuple of exception types worth retrying (anything
+    else — including ``BaseException`` kills like a real SIGKILL —
+    propagates); each restart sleeps ``backoff_s * 2**(restarts-1)`` via the
+    injectable ``sleep_fn`` before restoring, so a flapping dependency gets
+    exponentially more room instead of a hot retry loop."""
     restarts = 0
     step = restore_fn()
     events = {"restarts": 0, "saves": 0}
@@ -115,12 +124,14 @@ def run_with_retries(
             if step % save_every == 0:
                 save_fn(step)
                 events["saves"] += 1
-        except SimulatedFailure:
+        except retry_on:
             restarts += 1
             events["restarts"] = restarts
             if restarts > policy.max_restarts:
                 raise
             if on_event:
                 on_event("restart", step)
+            if backoff_s > 0.0:
+                sleep_fn(backoff_s * (2 ** (restarts - 1)))
             step = restore_fn()
     return events

@@ -1,0 +1,52 @@
+"""``repro.faults`` — the realized-fault execution layer.
+
+Three pieces, one contract: **``faults=None`` engines are bit-for-bit the
+unfaulted programs** (faultedness joins the compile key; the default
+artifacts never contain any of this).
+
+- **FaultTrace** (``repro.faults.trace``): seedable, composable *realized*
+  event streams — DC hard-crash, capacity brownout, WAN link partition,
+  price/carbon telemetry dropout — as a jittable pytree of hourly
+  multipliers over the planner's ``EnvParams``. Solvers keep planning on
+  the unfaulted env; the trace is what actually happened.
+- **Failover execution** (``repro.faults.failover``): inside the jitted
+  scan, each hour builds the realized env view, re-projects the planner's
+  allocation against realized capacity via a policy (``renormalize |
+  spill_nearest | drop``) and simulates the epoch there, emitting
+  ``unserved_demand`` / ``failover_moved`` / ``degraded_sla_cost_usd``
+  through the engines' totals, taps and RunRecords.
+- **Graceful degradation + resume** (``repro.faults.guard`` /
+  ``repro.faults.resume``): finite-guards on solver outputs with a
+  compiled fallback to the capacity-proportional baseline (surfaced as a
+  ``fallback_hours`` counter), and the journal/supervisor plumbing behind
+  ``sweep(..., resume_dir=...)`` — per-chunk completion checkpoints,
+  resume-after-kill, bounded retry with exponential backoff, per-chunk
+  wall timeouts.
+
+Typical use::
+
+    from repro import faults
+    from repro.core import ExperimentSpec, run
+
+    trace = faults.compose(faults.dc_crash(env, dc=1, start=12, duration=6),
+                           faults.wan_partition(env, a=0, b=1))
+    res = run(ExperimentSpec(technique="gt-drl",
+                             failover="spill_nearest"), env, faults=trace)
+    res["totals"]["unserved_demand"], res["totals"]["failover_moved"]
+"""
+from .failover import (DEFAULT_POLICY, POLICIES, apply_failover, execute_hour,
+                       realized_env)
+from .guard import guard_fractions
+from .resume import (KilledMidSweep, PointTimeout, SweepJournal,
+                     call_with_timeout, check_kill_switch, inject_kill_after)
+from .trace import (FaultTrace, brownout, compose, dc_crash, no_faults,
+                    random_trace, telemetry_dropout, wan_partition)
+
+__all__ = [
+    "FaultTrace", "no_faults", "dc_crash", "brownout", "wan_partition",
+    "telemetry_dropout", "compose", "random_trace",
+    "POLICIES", "DEFAULT_POLICY", "realized_env", "apply_failover",
+    "execute_hour", "guard_fractions",
+    "SweepJournal", "KilledMidSweep", "PointTimeout", "call_with_timeout",
+    "check_kill_switch", "inject_kill_after",
+]

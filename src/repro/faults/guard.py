@@ -1,0 +1,39 @@
+"""Numerical graceful degradation: finite-guards on solver outputs.
+
+A diverged solver (NaN/Inf logits after a bad gradient step, a degenerate
+all-zero simplex row) must cost a metric — ``fallback_hours`` — not a
+crashed or silently-poisoned run. ``guard_fractions`` is compiled into the
+faulted engines (and any spec with ``guard=True``): when the hour's joint
+strategy is non-finite or degenerate it is replaced wholesale by the
+capacity-proportional allocation — the ``fd`` baseline's natural feasible
+starting point (``game.capacity_fractions``) — and the hour is counted.
+
+The fallback is computed unconditionally (it is a handful of FLOPs against
+a solver step's thousands) and selected with ``jnp.where``, because a
+``lax.cond`` under ``vmap`` lowers to a select that runs both branches
+anyway. Engines without ``guard`` compile none of this — the ``faults=None``
+default program is untouched.
+"""
+from __future__ import annotations
+
+from typing import Tuple
+
+import jax.numpy as jnp
+
+from ..dcsim import env as E
+
+_EPS = 1e-6
+
+
+def guard_fractions(env: E.EnvParams, tau,
+                    fractions: jnp.ndarray) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """Return ``(fractions, fell_back)``: the solver's joint strategy if
+    every entry is finite and every simplex row carries mass, else the
+    capacity-proportional fallback; ``fell_back`` is 1.0 on fallback hours
+    (summed into the ``fallback_hours`` total by the engines)."""
+    er_t = E.capacity_at(env, tau)
+    base = er_t / jnp.maximum(jnp.sum(er_t, axis=1, keepdims=True), 1e-9)
+    fallback = jnp.broadcast_to(base, fractions.shape)
+    ok = (jnp.all(jnp.isfinite(fractions))
+          & jnp.all(jnp.sum(fractions, axis=-1) > _EPS))
+    return jnp.where(ok, fractions, fallback), jnp.where(ok, 0.0, 1.0)

@@ -138,19 +138,33 @@ def make_record(
 def write_record(record: Dict[str, Any],
                  path: Optional[str] = None) -> str:
     """Append one record to a JSONL file (default ``runs/records.jsonl``),
-    creating the directory as needed. Returns the path written."""
+    creating the directory as needed. Returns the path written.
+
+    The whole line goes down in ONE ``os.write`` on an ``O_APPEND`` fd:
+    concurrent writers (parallel sweeps, a recording run racing the report)
+    never interleave bytes, and a crash can at worst truncate the final
+    line — which ``load_records`` tolerates — never corrupt earlier ones.
+    """
     path = path or DEFAULT_PATH
     d = os.path.dirname(path)
     if d:
         os.makedirs(d, exist_ok=True)
-    with open(path, "a") as f:
-        json.dump(record, f, sort_keys=True)
-        f.write("\n")
+    line = json.dumps(record, sort_keys=True) + "\n"
+    fd = os.open(path, os.O_WRONLY | os.O_APPEND | os.O_CREAT, 0o644)
+    try:
+        os.write(fd, line.encode("utf-8"))
+    finally:
+        os.close(fd)
     return path
 
 
 def load_records(*paths: str) -> List[Dict[str, Any]]:
-    """Read records back from JSONL files (paths may be globs)."""
+    """Read records back from JSONL files (paths may be globs).
+
+    A truncated TRAILING line (the tail a crash mid-append leaves behind)
+    is skipped; a malformed line anywhere else still raises — that is
+    corruption, not a torn write, and silently dropping it would bias the
+    scoreboard."""
     files: List[str] = []
     for p in paths or (DEFAULT_PATH,):
         hits = sorted(_glob.glob(p))
@@ -158,8 +172,13 @@ def load_records(*paths: str) -> List[Dict[str, Any]]:
     out: List[Dict[str, Any]] = []
     for fp in files:
         with open(fp) as f:
-            for line in f:
-                line = line.strip()
-                if line:
-                    out.append(json.loads(line))
+            lines = [ln.strip() for ln in f]
+        lines = [ln for ln in lines if ln]
+        for i, line in enumerate(lines):
+            try:
+                out.append(json.loads(line))
+            except json.JSONDecodeError:
+                if i == len(lines) - 1:
+                    continue  # torn final append from a crash: skip it
+                raise
     return out

@@ -121,8 +121,13 @@ def main(argv: Optional[List[str]] = None) -> None:
     args = ap.parse_args(argv)
     md = report(R.load_records(*args.paths), title=args.title)
     if args.out:
-        with open(args.out, "w") as f:
+        # write-then-rename: a reader (or a crash) never sees a half
+        # scoreboard
+        import os
+        tmp = args.out + ".tmp"
+        with open(tmp, "w") as f:
             f.write(md)
+        os.replace(tmp, args.out)
         print(f"wrote {args.out}")
     else:
         print(md)

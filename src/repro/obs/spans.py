@@ -107,12 +107,16 @@ _evictions: int = 0
 
 def engine_key_str(key: tuple) -> str:
     """Compact, human-scannable form of an engine compile key:
-    ``kind:technique:objective:h<hours>:cfg=<...>:routed=<...>:taps=<...>``."""
-    kind, technique, objective, hours, cfg, routed, taps = key
+    ``kind:technique:objective:h<hours>:cfg=<...>:routed=<...>:
+    faults=<policy|off>:guard=<on|off>:taps=<...>``."""
+    (kind, technique, objective, hours, cfg, routed, failover, guard,
+     faulted, taps) = key
     cfg_s = "default" if cfg is None else type(cfg).__name__
     taps_s = ",".join(sorted(taps)) if taps else "off"
+    faults_s = failover if faulted else "off"
     return (f"{kind}:{technique}:{objective}:h{hours}:cfg={cfg_s}:"
-            f"routed={bool(routed)}:taps={taps_s}")
+            f"routed={bool(routed)}:faults={faults_s}:"
+            f"guard={'on' if guard else 'off'}:taps={taps_s}")
 
 
 def _stat(key: tuple) -> EngineStat:

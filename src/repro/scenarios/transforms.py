@@ -23,6 +23,15 @@ Windows are ``[start, start+duration)`` in UTC hours, wrapping modulo 24.
 All randomness flows through an explicit ``seed`` so a transform is a fixed
 function of its parameters; shapes and dtypes are always preserved.
 
+These are *planned* (briefed) events: a transform edits the ``EnvParams``
+the solvers plan on, so the scheduler sees the event coming and routes
+around it from hour 0 — ``dc_outage`` models a maintenance window on the
+calendar. Disruptions that arrive *during execution*, with the planner
+still optimizing the healthy env, are the other half of robustness and
+live in ``repro.faults`` (``FaultTrace`` + ``run(..., faults=...)``): same
+physical events, applied to the realized env view inside the engine while
+the plan stays blind.
+
 Each registration declares its canonical *severity knob* (``severity=`` on
 ``@register``): the one parameter a magnitude grid sweeps — so severity
 sweeps (``repro.core.experiment.sweep`` / ``scenarios.build_grid``) can say
@@ -110,7 +119,13 @@ def flash_crowd(start: int = 18, duration: int = 3, magnitude: float = 3.0,
 @register("dc_outage", severity="duration")
 def dc_outage(dc: int = 0, start: int = 8, duration: int = 6) -> Transform:
     """Full outage of one DC for the window: avail → 0 (capacity, IT power
-    and idle draw all vanish; project_feasible sheds its load elsewhere)."""
+    and idle draw all vanish; project_feasible sheds its load elsewhere).
+
+    This is the *planned* outage — solvers see the dark window in their
+    ``EnvParams`` and never schedule onto it. For the unplanned version
+    (the planner keeps allocating to a DC that actually crashed, and a
+    failover policy re-projects at execution time) use
+    ``repro.faults.dc_crash`` with ``run(..., faults=...)``."""
     def t(env: EnvParams) -> EnvParams:
         row = _rows(env.avail.shape[0], (dc,))
         off = np.outer(row, _window(start, duration))

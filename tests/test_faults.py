@@ -1,0 +1,385 @@
+"""Realized-fault execution layer: plan/execute split, failover policies,
+graceful degradation, resumable sweeps (repro.faults)."""
+import json
+import os
+import shutil
+import time
+
+import numpy as np
+import jax.numpy as jnp
+import pytest
+
+from _hyp_compat import given, st
+
+from repro import faults, obs
+from repro.core import (ExperimentSpec, register_technique, run, sweep,
+                        unregister_technique)
+from repro.core.game import SolveResult
+from repro.dcsim import env as E
+import repro.core.experiment as X
+
+HOURS = 6
+
+
+@pytest.fixture(scope="module")
+def env():
+    return E.build_env(4, seed=0)
+
+
+@pytest.fixture(scope="module")
+def crash_trace(env):
+    # DC 1 dark for half the short day, plus a WAN partition
+    return faults.compose(
+        faults.dc_crash(env, dc=1, start=2, duration=3),
+        faults.wan_partition(env, a=0, b=2, extra_ms=300.0))
+
+
+def _totals(res):
+    return res["totals"]
+
+
+# ---------------------------------------------------------------------------
+# the contract: faults=None and the identity trace reproduce the plan
+# ---------------------------------------------------------------------------
+
+def test_identity_trace_matches_unfaulted_exactly(env):
+    spec = ExperimentSpec(technique="fd", hours=HOURS)
+    base = _totals(run(spec, env))
+    ident = _totals(run(spec, env, faults=faults.no_faults(env)))
+    for k, v in base.items():
+        assert ident[k] == v, k  # bit-for-bit on the unrouted path
+    for k in X._FAULT_KEYS:
+        assert k not in base       # unfaulted results carry no fault keys
+        assert ident[k] == 0.0     # nothing happened
+
+def test_identity_trace_matches_unfaulted_routed(env):
+    spec = ExperimentSpec(technique="fd", hours=HOURS, routed=True)
+    base = _totals(run(spec, env))
+    ident = _totals(run(spec, env, faults=faults.no_faults(env)))
+    for k, v in base.items():
+        # the routed failover re-split is a ratio round-trip: allclose
+        np.testing.assert_allclose(ident[k], v, rtol=1e-5, atol=1e-4)
+
+
+def test_faulted_engine_is_separate_compile_entry(env):
+    spec = ExperimentSpec(technique="fd", hours=HOURS)
+    k0 = X._engine_key(spec)
+    k1 = X._engine_key(spec, faulted=True)
+    assert k0 != k1
+    # unfaulted lookups normalize the failover policy out of the key
+    assert X._engine_key(spec.replace(failover="drop")) == k0
+    assert X._engine_key(spec.replace(failover="drop"), faulted=True) != k1
+
+
+# ---------------------------------------------------------------------------
+# hard mid-day crash: finite totals, degradation metrics across techniques
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("technique,kw", [
+    ("fd", {}), ("nash", {}), ("gt-drl", {"pretrain": False}),
+])
+def test_crash_day_finite_with_failover(env, crash_trace, technique, kw):
+    spec = ExperimentSpec(technique=technique, hours=HOURS, **kw)
+    t = _totals(run(spec, env, faults=crash_trace))
+    assert all(np.isfinite(v) for v in t.values()), t
+    assert t["failover_moved"] > 0.0   # the planner kept using DC 1
+    assert t["unserved_demand"] >= 0.0
+
+
+def test_total_blackout_prices_unserved(env):
+    # every DC dark all day: nowhere to fail over to, everything unserved
+    tr = faults.compose(*[faults.dc_crash(env, dc=d, start=0, duration=24)
+                          for d in range(E.num_dcs(env))])
+    t = _totals(run(ExperimentSpec(technique="fd", hours=HOURS), env,
+                    faults=tr))
+    assert all(np.isfinite(v) for v in t.values()), t
+    assert t["unserved_demand"] > 0.0
+    assert t["failover_moved"] == 0.0
+
+
+def test_drop_policy_shed_vs_renormalize(env, crash_trace):
+    spec = ExperimentSpec(technique="fd", hours=HOURS)
+    ren = _totals(run(spec, env, faults=crash_trace))
+    drop = _totals(run(spec.replace(failover="drop"), env,
+                       faults=crash_trace))
+    assert drop["failover_moved"] == 0.0       # drop never moves mass
+    assert drop["unserved_demand"] > 0.0       # ... it sheds it
+    assert drop["unserved_demand"] > ren["unserved_demand"]
+
+
+# ---------------------------------------------------------------------------
+# engine parity under faults (scan is the reference)
+# ---------------------------------------------------------------------------
+
+def test_faulted_scan_loop_batched_parity(env, crash_trace):
+    spec = ExperimentSpec(technique="fd", hours=HOURS,
+                          failover="spill_nearest")
+    scan = _totals(run(spec, env, faults=crash_trace))
+    loop = _totals(run(spec.replace(engine="loop"), env, faults=crash_trace))
+    batched = _totals(run(spec.replace(engine="batched"), [env, env],
+                          faults=crash_trace))
+    for k, v in scan.items():
+        np.testing.assert_allclose(loop[k], v, rtol=1e-5, atol=1e-5)
+        np.testing.assert_allclose(batched[k][0], v, rtol=1e-5, atol=1e-5)
+        np.testing.assert_allclose(batched[k][1], batched[k][0])
+
+
+def test_month_engine_rejects_faults(env):
+    with pytest.raises(ValueError, match="month"):
+        run(ExperimentSpec(technique="fd", engine="month", hours=HOURS),
+            env, faults=faults.no_faults(env))
+
+
+# ---------------------------------------------------------------------------
+# apply_failover unit behavior
+# ---------------------------------------------------------------------------
+
+def test_spill_nearest_prefers_low_rtt(env):
+    d = E.num_dcs(env)
+    # DC 0 crashed; DC 1 is 5ms away, the rest 500ms, all with headroom
+    rtt = np.full((d, d), 500.0, dtype=np.float32)
+    np.fill_diagonal(rtt, 0.0)
+    rtt[0, 1] = rtt[1, 0] = 5.0
+    renv = env._replace(rtt=jnp.asarray(rtt),
+                        avail=env.avail.at[0].set(0.0))
+    i_n = E.num_players(env)
+    ar = np.zeros((i_n, d), dtype=np.float32)
+    ar[:, 0] = 1000.0  # everything planned onto the dead DC, well under
+    # the healthy DCs' headroom so placement is preference, not necessity
+    kept, unserved, moved = faults.apply_failover(renv, jnp.asarray(ar), 0,
+                                                  "spill_nearest")
+    kept = np.asarray(kept)
+    assert float(unserved) < 1e-3
+    assert np.allclose(float(moved), i_n * 1000.0, rtol=1e-5)
+    assert kept[:, 0].sum() == 0.0                    # nothing on the corpse
+    assert kept[:, 1].sum() > kept[:, 2:].sum()       # near beats far
+
+
+def test_apply_failover_routed_conserves_and_caps(env, crash_trace):
+    tau = 3  # inside the crash window
+    renv = faults.realized_env(env, crash_trace, tau)
+    s_n, i_n, d = E.num_sources(env), E.num_players(env), E.num_dcs(env)
+    rng = np.random.default_rng(0)
+    fr = rng.dirichlet(np.ones(d), size=(s_n, i_n)).astype(np.float32)
+    ar3 = E.project_feasible_routed(env, jnp.asarray(fr), tau)  # planned
+    kept3, unserved, moved = faults.apply_failover(renv, ar3, tau,
+                                                   "renormalize")
+    tot = np.asarray(jnp.sum(kept3, axis=0))
+    cap = np.asarray(E.capacity_at(renv, tau))
+    assert np.all(tot <= cap + 1e-2)                  # realized-capacity cap
+    assert float(unserved) >= -1e-3
+    # mass conservation up to the drop: planned == kept + unserved
+    np.testing.assert_allclose(float(jnp.sum(ar3)),
+                               float(jnp.sum(kept3)) + float(unserved),
+                               rtol=1e-5)
+
+
+# ---------------------------------------------------------------------------
+# numerical graceful degradation
+# ---------------------------------------------------------------------------
+
+def test_guard_falls_back_on_nan_solver(env):
+    def nan_solve(key, ctx, peak_state, cfg=None):
+        fr = jnp.full((E.num_players(ctx.env), E.num_dcs(ctx.env)), jnp.nan)
+        return SolveResult(fr, {})
+
+    register_technique("nan-solver", nan_solve, overwrite=True)
+    try:
+        spec = ExperimentSpec(technique="nan-solver", hours=HOURS)
+        t = _totals(run(spec, env))
+        assert not all(np.isfinite(v) for v in t.values())  # poisoned
+        t = _totals(run(spec.replace(guard=True), env))
+        assert all(np.isfinite(v) for v in t.values()), t
+        assert t["fallback_hours"] == HOURS   # every hour fell back
+    finally:
+        unregister_technique("nan-solver")
+
+
+def test_guard_is_invisible_on_healthy_solver(env):
+    spec = ExperimentSpec(technique="fd", hours=HOURS)
+    base = _totals(run(spec, env))
+    guarded = _totals(run(spec.replace(guard=True), env))
+    assert guarded["fallback_hours"] == 0.0
+    for k, v in base.items():
+        assert guarded[k] == v, k
+
+
+def test_gt_drl_reports_diverged_rounds(env):
+    from repro.core import gt_drl as G
+    from repro.core.game import GameContext
+    import jax
+    cfg = G.GTDRLConfig(rounds=2)
+    agents = G.init_agents(jax.random.PRNGKey(0), env, cfg, False)
+    ctx = GameContext(env=env, tau=jnp.int32(0), objective="carbon",
+                      routed=False)
+    _, res = G.solve_epoch(jax.random.PRNGKey(1), agents, ctx,
+                           jnp.zeros((E.num_dcs(env),)), cfg)
+    assert int(res.info["diverged_rounds"]) == 0   # healthy run never rewinds
+    assert np.all(np.isfinite(np.asarray(res.fractions)))
+
+
+# ---------------------------------------------------------------------------
+# planned outage stays finite (dark-DC latency guard)
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("engine", ["scan", "loop", "batched"])
+def test_planned_full_day_outage_finite(engine):
+    from repro import scenarios as S
+    env = S.Scenario("dc_outage", {"dc": 1, "start": 0,
+                                   "duration": 24}).apply(E.build_env(4, seed=0))
+    spec = ExperimentSpec(technique="fd", hours=HOURS, engine=engine)
+    t = _totals(run(spec, [env] if engine == "batched" else env))
+    vals = {k: (float(np.asarray(v).sum()) if engine == "batched" else v)
+            for k, v in t.items()}
+    assert all(np.isfinite(v) for v in vals.values()), vals
+
+
+def test_dark_dc_latency_is_saturated_not_idle_fast(env):
+    dark = env._replace(avail=env.avail.at[1].set(0.0))
+    i_n, d = E.num_players(env), E.num_dcs(env)
+    ar = jnp.zeros((i_n, d))
+    lat = np.asarray(E.latency_ms(dark, ar, 0))
+    lat_live = np.asarray(E.latency_ms(env, ar, 0))
+    assert np.all(np.isfinite(lat))
+    # the dead DC quotes WORSE latency than when alive and idle, not better
+    assert np.all(lat[:, 1] > lat_live[:, 1])
+
+
+# ---------------------------------------------------------------------------
+# property: routed projection respects realized capacity, conserves mass
+# ---------------------------------------------------------------------------
+
+@given(st.integers(min_value=0, max_value=2 ** 31 - 1),
+       st.integers(min_value=0, max_value=23))
+def test_project_feasible_routed_capacity_and_mass(seed, tau):
+    env = E.build_env(4, seed=0)
+    rng = np.random.default_rng(seed)
+    # random availability, including fully-dark DCs
+    avail = rng.uniform(0.0, 1.0, np.asarray(env.avail).shape)
+    avail[rng.integers(avail.shape[0])] = 0.0
+    env = env._replace(avail=jnp.asarray(avail.astype(np.float32)))
+    s_n, i_n, d = E.num_sources(env), E.num_players(env), E.num_dcs(env)
+    fr = rng.dirichlet(np.ones(d), size=(s_n, i_n)).astype(np.float32)
+    ar3 = np.asarray(E.project_feasible_routed(env, jnp.asarray(fr), tau))
+    assert np.all(np.isfinite(ar3))
+    assert np.all(ar3 >= -1e-6)
+    tot = ar3.sum(axis=0)
+    cap = np.asarray(E.capacity_at(env, tau))
+    assert np.all(tot <= cap + 1e-2 + 1e-5 * cap)   # never above capacity
+    # conserves demand mass up to drop (water-fill may shed, never create)
+    demand = float(np.asarray(env.car)[:, tau].sum())
+    assert ar3.sum() <= demand * (1 + 1e-5) + 1e-3
+
+
+# ---------------------------------------------------------------------------
+# resumable sweeps
+# ---------------------------------------------------------------------------
+
+GRID = {"wan_degradation": (1.0, 2.0, 4.0)}
+
+
+def test_sweep_kill_resume_roundtrip(env, tmp_path, monkeypatch):
+    spec = ExperimentSpec(technique="fd", hours=HOURS)
+    ref = sweep(spec, GRID, base_env=env)
+    journal = str(tmp_path / "journal")
+
+    with pytest.raises(faults.KilledMidSweep):
+        with faults.inject_kill_after(2):
+            sweep(spec, GRID, base_env=env, resume_dir=journal)
+    assert faults.SweepJournal  # journal dir holds the completed prefix
+    assert len(os.listdir(journal)) == 2
+
+    calls = []
+    orig = X._run_batched
+    monkeypatch.setattr(X, "_run_batched",
+                        lambda *a, **kw: calls.append(1) or orig(*a, **kw))
+    res = sweep(spec, GRID, base_env=env, resume_dir=journal)
+    assert len(calls) == 1             # completed chunks are NOT recomputed
+    assert res["resume"]["restored"] == 2
+    assert res["resume"]["computed"] == 1
+    for k, v in ref["results"]["fd"]["totals"].items():
+        np.testing.assert_allclose(res["results"]["fd"]["totals"][k], v)
+    for k, v in ref["results"]["fd"]["per_epoch"].items():
+        np.testing.assert_allclose(res["results"]["fd"]["per_epoch"][k], v)
+
+
+def test_sweep_journal_rejects_different_sweep(env, tmp_path):
+    spec = ExperimentSpec(technique="fd", hours=HOURS)
+    journal = str(tmp_path / "journal")
+    sweep(spec, GRID, base_env=env, resume_dir=journal)
+    with pytest.raises(ValueError, match="different sweep"):
+        sweep(spec.replace(hours=HOURS - 1), GRID, base_env=env,
+              resume_dir=journal)
+
+
+def test_sweep_retries_with_backoff(env, tmp_path, monkeypatch):
+    spec = ExperimentSpec(technique="fd", hours=HOURS)
+    orig = X._run_batched
+    fails = {"left": 2}
+
+    def flaky(*a, **kw):
+        if fails["left"] > 0:
+            fails["left"] -= 1
+            raise RuntimeError("transient")
+        return orig(*a, **kw)
+
+    ref = sweep(spec, GRID, base_env=env)
+    monkeypatch.setattr(X, "_run_batched", flaky)
+    res = sweep(spec, GRID, base_env=env,
+                resume_dir=str(tmp_path / "journal"), max_retries=3,
+                backoff_s=0.0)
+    assert res["resume"]["retries"] == 2
+    for k, v in ref["results"]["fd"]["totals"].items():
+        np.testing.assert_allclose(res["results"]["fd"]["totals"][k], v)
+
+
+def test_sweep_retry_budget_exhausts(env, tmp_path, monkeypatch):
+    monkeypatch.setattr(X, "_run_batched",
+                        lambda *a, **kw: (_ for _ in ()).throw(
+                            RuntimeError("always broken")))
+    with pytest.raises(RuntimeError, match="always broken"):
+        sweep(ExperimentSpec(technique="fd", hours=HOURS), GRID,
+              base_env=env, resume_dir=str(tmp_path / "journal"),
+              max_retries=1, backoff_s=0.0)
+
+
+def test_run_with_retries_backoff_schedule():
+    from repro.distributed import fault_tolerance as FT
+    sleeps = []
+    calls = {"n": 0}
+
+    def step(_):
+        calls["n"] += 1
+        if calls["n"] <= 3:
+            raise FT.SimulatedFailure()
+
+    FT.run_with_retries(step, total_steps=1, save_every=1,
+                        save_fn=lambda s: None, restore_fn=lambda: 0,
+                        backoff_s=0.1, sleep_fn=sleeps.append)
+    assert sleeps == [0.1, 0.2, 0.4]   # exponential
+
+
+def test_call_with_timeout():
+    assert faults.call_with_timeout(lambda: 42, None) == 42
+    assert faults.call_with_timeout(lambda: 42, 5.0) == 42
+    with pytest.raises(faults.PointTimeout):
+        faults.call_with_timeout(lambda: time.sleep(10), 0.2)
+
+
+# ---------------------------------------------------------------------------
+# atomic records
+# ---------------------------------------------------------------------------
+
+def test_records_truncated_trailing_line_skipped(tmp_path):
+    path = str(tmp_path / "records.jsonl")
+    obs.write_record({"kind": "a", "x": 1}, path)
+    obs.write_record({"kind": "b", "x": 2}, path)
+    with open(path, "a") as f:
+        f.write('{"kind": "c", "x"')  # the torn tail of a crashed append
+    recs = obs.load_records(path)
+    assert [r["kind"] for r in recs] == ["a", "b"]
+    # mid-file corruption is NOT silently skipped
+    with open(path, "w") as f:
+        f.write('{"kind": "a"\n{"kind": "b", "x": 2}\n')
+    with pytest.raises(json.JSONDecodeError):
+        obs.load_records(path)

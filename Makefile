@@ -3,7 +3,7 @@ PY ?= python
 export PYTHONPATH := src$(if $(PYTHONPATH),:$(PYTHONPATH))
 
 .PHONY: check bench bench-quick bench-scenarios bench-smoke sweep-smoke \
-        obs-smoke faults-smoke scoreboard
+        obs-smoke faults-smoke llm-smoke scoreboard
 
 # PYTEST_ARGS lets CI add plugins the container image lacks
 # (e.g. PYTEST_ARGS="--timeout=300" with pytest-timeout installed)
@@ -36,6 +36,12 @@ obs-smoke:
 # `python examples/run_faults.py`)
 faults-smoke:
 	$(PY) examples/run_faults.py --quick
+
+# workload-capability smoke: all six techniques on the token-grounded llm
+# workload (roofline-derived model-family env) across a workload_mix_shift
+# day (see dcsim.capability; full day via `python examples/run_llm_mix.py`)
+llm-smoke:
+	$(PY) examples/run_llm_mix.py --quick
 
 # re-render the committed SCOREBOARD.md from the committed run records
 scoreboard:

@@ -34,6 +34,15 @@ Rows (name, us_per_call, derived):
                               (chunked execution, one checkpoint per
                               chunk; overhead vs the one-compile in-memory
                               sweep derived — the price of crash safety)
+  engine/build_env_llm        us per token-grounded env build (the llm
+                              capability layer: roofline derivation over
+                              the model zoo x accelerator mix; overhead vs
+                              the aibench constant tables derived)
+  engine/day_scan_llm         us per compiled day on the derived llm env
+                              (I = model families instead of the paper's
+                              task types; overhead vs the aibench day
+                              derived — the engines are workload-agnostic,
+                              so this tracks the I-axis cost alone)
 """
 from __future__ import annotations
 
@@ -188,6 +197,31 @@ def run(rows):
          f"points={n_pts};hours={HOURS};"
          f"us_per_point={sweep_s * 1e6 / n_pts:.0f};"
          f"sla_usd_max={res_g['results']['fd']['totals']['sla_miss_cost_usd'].max():.0f}")
+
+    # -- token-grounded llm workload: capability derivation + compiled day --
+    E.build_env(4, seed=0, workload="llm")  # warm (config imports etc.)
+    with Timer() as tm:
+        for _ in range(3):
+            E.build_env(4, seed=0, workload="llm")
+    build_llm_s = tm.seconds / 3
+    with Timer() as tm:
+        for _ in range(3):
+            E.build_env(4, seed=0)
+    build_aib_s = tm.seconds / 3
+    emit(rows, "engine/build_env_llm", build_llm_s,
+         f"families={E.build_env(4, seed=0, workload='llm').er.shape[0]};"
+         f"overhead_vs_aibench={build_llm_s / max(build_aib_s, 1e-9):.2f}x")
+
+    llm_env = E.build_env(4, seed=0, workload="llm")
+    lspec = X.ExperimentSpec(technique="fd", objective="cost", hours=HOURS,
+                             cfg=CFGS["fd"], workload="llm")
+    X.run(lspec, llm_env)  # warm (separate compile key: workload + I retrace)
+    with Timer() as tm:
+        res_l = X.run(lspec, llm_env)
+    emit(rows, "engine/day_scan_llm", tm.seconds,
+         f"hours={HOURS};families={llm_env.er.shape[0]};"
+         f"cost={res_l['totals']['cost_usd']:.0f};"
+         f"overhead_vs_aibench={tm.seconds / max(day_s['cost'], 1e-9):.2f}x")
 
     # -- realized faults: the plan/execute split vs the plain compiled day --
     from repro import faults as FL

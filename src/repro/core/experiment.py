@@ -118,8 +118,14 @@ class ExperimentSpec:
     taps: Optional[Tuple[str, ...]] = None   # obs tap patterns (None: ambient)
     failover: str = FL.DEFAULT_POLICY     # realized-fault failover policy
     guard: bool = False                   # finite-guard even when unfaulted
+    workload: str = "aibench"             # capability layer the envs came from
 
     def __post_init__(self):
+        if not isinstance(self.workload, str):
+            raise ValueError(
+                "spec.workload is a capability-layer *name* (the envs "
+                "already embed the derived numbers; the name only keys the "
+                f"compile cache), got {type(self.workload).__name__}")
         if self.engine not in ENGINES:
             raise ValueError(
                 f"unknown engine {self.engine!r}; known: {ENGINES}")
@@ -137,10 +143,17 @@ class ExperimentSpec:
     def replace(self, **changes) -> "ExperimentSpec":
         return dataclasses.replace(self, **changes)
 
-    def static_key(self) -> Tuple[str, str, int, Any, bool, str, bool]:
-        """The compile-relevant fields, in ``_day_core`` argument order."""
+    def static_key(self) -> Tuple[str, str, int, Any, bool, str, bool, str]:
+        """The compile-relevant fields, in ``_day_core`` argument order.
+
+        ``workload`` joins the key even though the engines only ever see
+        ``EnvParams``: two workloads legitimately differ in the task-type
+        count ``I`` (a shape, hence a retrace), and keeping their artifacts
+        under distinct keys makes the cache accounting
+        (``obs.engine_stat``) attribute compiles to the right workload.
+        """
         return (self.technique, self.objective, self.hours, self.cfg,
-                self.routed, self.failover, self.guard)
+                self.routed, self.failover, self.guard, self.workload)
 
     def effective_taps(self) -> frozenset:
         """The tap set this spec's engines compile under: the spec's own
@@ -170,7 +183,8 @@ def _solver_step(technique: str, cfg) -> Callable:
 @functools.lru_cache(maxsize=None)
 def _day_core(technique: str, objective: str, hours: int, cfg,
               routed: bool = False, failover: str = FL.DEFAULT_POLICY,
-              guard: bool = False, faulted: bool = False,
+              guard: bool = False, workload: str = "aibench",
+              faulted: bool = False,
               taps: frozenset = frozenset()) -> Callable:
     """day(env, key, peak0, state0[, trace]) -> (peak, state, metrics dict).
 
@@ -191,7 +205,12 @@ def _day_core(technique: str, objective: str, hours: int, cfg,
     trace-time enablement themselves (the dispatch wrapper pins the active
     set to this key's ``taps``), so a taps-off core lowers to exactly the
     pre-obs program and a tapped core is a distinct artifact.
+
+    ``workload`` likewise only keys the cache (see ``static_key``): the body
+    is workload-agnostic — a derived llm env is just an ``EnvParams`` with a
+    different ``I``.
     """
+    del workload  # cache-key discriminator only
     step = _solver_step(technique, cfg)
     guard_on = guard or faulted
 
@@ -234,21 +253,26 @@ def _day_core(technique: str, objective: str, hours: int, cfg,
     return day
 
 
-def _sharded_batch(core: Callable, faulted: bool = False) -> Callable:
+def _sharded_batch(core: Callable, faulted: bool = False,
+                   fault_axis: bool = False) -> Callable:
     """Shard the batched day engine's env axis across all local devices.
 
     ``shard_map`` over a 1-axis device mesh: env rows and their RNG keys
-    split by shard, (peak0, state0) — and the fault trace, when present —
-    replicated; each device runs the plain vmapped day core on its slice,
-    so a 1-device mesh runs the EXACT unsharded program and N devices
-    evaluate N env shards in parallel with zero cross-device collectives.
+    split by shard, (peak0, state0) replicated — and the fault trace, when
+    present, replicated (one shared day of trouble) or split with the env
+    rows (``fault_axis=True``, a per-point stacked trace); each device runs
+    the plain vmapped day core on its slice, so a 1-device mesh runs the
+    EXACT unsharded program and N devices evaluate N env shards in parallel
+    with zero cross-device collectives.
     """
     from jax.experimental.shard_map import shard_map
     from jax.sharding import Mesh, PartitionSpec as P
 
     mesh = Mesh(np.asarray(jax.devices()), ("env",))
-    axes = (0, 0, None, None) + ((None,) if faulted else ())
-    specs = (P("env"), P("env"), P(), P()) + ((P(),) if faulted else ())
+    axes = (0, 0, None, None) + (
+        ((0 if fault_axis else None),) if faulted else ())
+    specs = (P("env"), P("env"), P(), P()) + (
+        ((P("env") if fault_axis else P()),) if faulted else ())
     batched = jax.vmap(core, in_axes=axes)
     fn = shard_map(batched, mesh=mesh,
                    in_specs=specs,
@@ -262,24 +286,34 @@ _KINDS = ("day", "batched", "sharded", "month")
 
 @functools.lru_cache(maxsize=None)
 def _compiled_raw(kind: str, technique: str, objective: str, hours: int, cfg,
-                  routed: bool, failover: str, guard: bool, faulted: bool,
+                  routed: bool, failover: str, guard: bool, workload: str,
+                  faulted: bool, fault_axis: bool,
                   taps: frozenset) -> Callable:
     """THE compile cache: one jitted artifact per (engine kind, spec static
-    fields, failover/guard/faulted flags, tap set), shared by
+    fields, failover/guard/faulted flags, workload, tap set), shared by
     ``run``/``sweep`` and every legacy shim — no engine compiles per call
     site anymore. Artifacts come back wrapped in the obs dispatch span
-    (per-call timing + trace-time tap pinning)."""
+    (per-call timing + trace-time tap pinning).
+
+    ``fault_axis`` (batched/sharded only): the FaultTrace carries a leading
+    env-batch axis — one realized day of trouble per env row — instead of
+    one trace shared by every row."""
     key = (kind, technique, objective, hours, cfg, routed, failover, guard,
-           faulted, taps)
+           workload, faulted, fault_axis, taps)
+    if fault_axis and kind not in ("batched", "sharded"):
+        raise ValueError("a per-point (stacked) FaultTrace only makes sense "
+                         "on the batched/sharded engines; the day and month "
+                         f"engines take one trace (kind={kind!r})")
     core = _day_core(technique, objective, hours, cfg, routed, failover,
-                     guard, faulted, taps)
+                     guard, workload, faulted, taps)
     if kind == "day":
         fn = jax.jit(core)
     elif kind == "batched":
-        axes = (0, 0, None, None) + ((None,) if faulted else ())
+        axes = (0, 0, None, None) + (
+            ((0 if fault_axis else None),) if faulted else ())
         fn = jax.jit(jax.vmap(core, in_axes=axes))
     elif kind == "sharded":
-        fn = _sharded_batch(core, faulted)
+        fn = _sharded_batch(core, faulted, fault_axis)
     elif kind == "month":
         if faulted:
             raise ValueError(
@@ -306,12 +340,13 @@ def _compiled_raw(kind: str, technique: str, objective: str, hours: int, cfg,
 
 def _compiled(kind: str, technique: str, objective: str, hours: int, cfg,
               routed: bool, failover: str = FL.DEFAULT_POLICY,
-              guard: bool = False, faulted: bool = False,
+              guard: bool = False, workload: str = "aibench",
+              faulted: bool = False, fault_axis: bool = False,
               taps: frozenset = frozenset()) -> Callable:
     """Front door to the compile cache: same artifact as ``_compiled_raw``
     but every lookup/build is accounted in ``obs.cache_stats()``."""
     key = (kind, technique, objective, hours, cfg, routed, failover, guard,
-           faulted, taps)
+           workload, faulted, fault_axis, taps)
     hit = obs.spans.engine_lookup(key)
     if hit:
         return _compiled_raw(*key)
@@ -326,30 +361,33 @@ _compiled.cache_info = _compiled_raw.cache_info
 
 
 def _engine_key(spec: ExperimentSpec, *, shard: bool = False,
-                faulted: bool = False) -> tuple:
+                faulted: bool = False, fault_axis: bool = False) -> tuple:
     """The compile-cache key ``run`` uses for this spec (also the join key
     for ``obs.engine_stat`` / run records).
 
     ``failover`` is an execute-time policy: on unfaulted lookups it is
     normalized to the default so a spec's policy choice never forks the
-    (identical) unfaulted artifact.
+    (identical) unfaulted artifact; ``fault_axis`` is likewise normalized
+    out of unfaulted keys.
     """
     kind = {"scan": "day", "batched": "sharded" if shard else "batched",
             "month": "month"}.get(spec.engine)
     if kind is None:
         raise ValueError(f"engine {spec.engine!r} is not compiled")
-    technique, objective, hours, cfg, routed, failover, guard = \
+    technique, objective, hours, cfg, routed, failover, guard, workload = \
         spec.static_key()
     if not faulted:
         failover = FL.DEFAULT_POLICY
+        fault_axis = False
     return (kind, technique, objective, hours, cfg, routed, failover, guard,
-            faulted, spec.effective_taps())
+            workload, faulted, fault_axis, spec.effective_taps())
 
 
 def compiled_engine(spec: ExperimentSpec, *, shard: bool = False,
-                    faulted: bool = False) -> Callable:
+                    faulted: bool = False, fault_axis: bool = False) -> Callable:
     """The spec's compiled engine (public access to the cache)."""
-    return _compiled(*_engine_key(spec, shard=shard, faulted=faulted))
+    return _compiled(*_engine_key(spec, shard=shard, faulted=faulted,
+                                  fault_axis=fault_axis))
 
 
 def _clear_compile_caches() -> None:
@@ -407,6 +445,12 @@ def _format_day(ms, hours: int, technique: str, objective: str) -> Dict[str, Any
 # the façade
 # ---------------------------------------------------------------------------
 
+def _trace_stacked(faults) -> bool:
+    """Does this FaultTrace carry a leading env-batch axis (one realized
+    trace per env row)? Detected off ``avail_mult``: (n, D, 24) vs (D, 24)."""
+    return faults is not None and np.ndim(faults.avail_mult) == 3
+
+
 def run(
     spec: ExperimentSpec,
     envs,
@@ -433,9 +477,11 @@ def run(
     hour executes against the trace's realized env view under
     ``spec.failover``, adding ``unserved_demand`` / ``failover_moved`` /
     ``degraded_sla_cost_usd`` / ``fallback_hours`` to the metrics. The
-    batched engine shares one trace across all env rows (the same day of
-    trouble hits every scenario). ``faults=None`` (default) dispatches the
-    exact unfaulted artifacts.
+    batched engine takes either one trace shared across all env rows (the
+    same day of trouble hits every scenario) or a stacked per-row trace
+    (``faults.stack_traces`` — leading axis matches the env batch, so each
+    grid point realizes its own day of trouble). ``faults=None`` (default)
+    dispatches the exact unfaulted artifacts.
 
     ``record`` (True, or a JSONL path) appends a spec-keyed ``RunRecord``
     — totals, convergence curves, engine timing spans, git/jax provenance —
@@ -462,6 +508,11 @@ def run(
         raise ValueError("the month engine does not take realized faults "
                          "yet (a FaultTrace describes one day); run faulted "
                          "days through scan/loop/batched")
+    if _trace_stacked(faults) and spec.engine != "batched":
+        raise ValueError("a stacked (per-point) FaultTrace needs "
+                         f"engine='batched', got {spec.engine!r}; the "
+                         "scan/loop engines evaluate one env against one "
+                         "trace")
     game.get_technique(spec.technique)  # fail fast with the known-names list
     if spec.engine == "scan":
         result = _run_scan(spec, envs, peak_state0, solver_state0, faults)
@@ -473,17 +524,20 @@ def run(
         result = _run_month(spec, envs, peak_state0, solver_state0)
     if record:
         _record_run(spec, result, shard=shard, path=record,
-                    faulted=faults is not None)
+                    faulted=faults is not None,
+                    fault_axis=_trace_stacked(faults))
     return result
 
 
 def _record_run(spec: ExperimentSpec, result: Dict[str, Any], *,
                 shard: bool = False, path: Any = None,
-                kind: str = "run", faulted: bool = False) -> str:
+                kind: str = "run", faulted: bool = False,
+                fault_axis: bool = False) -> str:
     """Emit one JSONL RunRecord for a finished ``run`` result."""
     engine_spans = (None if spec.engine == "loop"
                     else obs.engine_stat(_engine_key(spec, shard=shard,
-                                                     faulted=faulted)))
+                                                     faulted=faulted,
+                                                     fault_axis=fault_axis)))
     rec = obs.make_record(spec, result, kind=kind, engine_spans=engine_spans)
     return obs.write_record(rec, path if isinstance(path, str) else None)
 
@@ -580,9 +634,15 @@ def _run_batched(spec, envs, solver_state0, shard, faults=None):
     peak0 = jnp.zeros((E.num_dcs(env0),))
 
     faulted = faults is not None
-    trace = (faults,) if faulted else ()  # one trace, replicated over rows
+    stacked = _trace_stacked(faults)  # per-row traces vs one shared trace
+    if stacked and int(faults.avail_mult.shape[0]) != n:
+        raise ValueError(
+            f"stacked FaultTrace has {int(faults.avail_mult.shape[0])} rows "
+            f"for {n} scenario-days")
+    trace = (faults,) if faulted else ()
     if not shard:
-        batch = _compiled(*_engine_key(spec, faulted=faulted))
+        batch = _compiled(*_engine_key(spec, faulted=faulted,
+                                       fault_axis=stacked))
         _, _, ms = batch(env_b, keys, peak0, state0, *trace)
     else:
         pad = (-n) % jax.device_count()
@@ -590,7 +650,13 @@ def _run_batched(spec, envs, solver_state0, shard, faults=None):
             env_b = E.pad_env_batch(env_b, n + pad)
             keys = jnp.concatenate(
                 [keys, jnp.broadcast_to(keys[-1:], (pad,) + keys.shape[1:])])
-        batch = _compiled(*_engine_key(spec, shard=True, faulted=faulted))
+            if stacked:  # pad the trace rows alongside their envs
+                trace = (jax.tree_util.tree_map(
+                    lambda x: jnp.concatenate(
+                        [x, jnp.broadcast_to(x[-1:], (pad,) + x.shape[1:])]),
+                    faults),)
+        batch = _compiled(*_engine_key(spec, shard=True, faulted=faulted,
+                                       fault_axis=stacked))
         _, _, ms = batch(env_b, keys, peak0, state0, *trace)
         if pad:
             ms = {k: v[:n] for k, v in ms.items()}
@@ -668,8 +734,11 @@ def sweep(
     ``spec.seed``'s RNG stream, so severity is the only variable along a
     curve. ``cfg_overrides`` maps technique -> solver config; ``spec.cfg``
     covers ``spec.technique`` itself, other techniques default. ``faults``
-    (a ``repro.faults.FaultTrace``) executes every grid point through the
-    realized plan/execute split under ``spec.failover``.
+    executes every grid point through the realized plan/execute split under
+    ``spec.failover`` — one ``repro.faults.FaultTrace`` shared by every
+    point, a sequence of traces (one per grid point, stacked via
+    ``faults.stack_traces``), or an already-stacked trace whose leading
+    axis matches the grid.
 
     ``resume_dir`` switches to resumable execution: the grid runs in chunks
     of ``chunk_points`` grid points (default 1) per technique, each
@@ -696,6 +765,13 @@ def sweep(
     n = len(rows)
     techniques = tuple(techniques) if techniques else (spec.technique,)
     overrides = dict(cfg_overrides or {})
+
+    if faults is not None and not isinstance(faults, FL.FaultTrace):
+        faults = FL.stack_traces(faults)  # sequence: one trace per point
+    if _trace_stacked(faults) and int(faults.avail_mult.shape[0]) != n:
+        raise ValueError(
+            f"per-point faults: {int(faults.avail_mult.shape[0])} traces "
+            f"for {n} grid points")
 
     def point_spec(t, n_pts):
         cfg = overrides.get(t, spec.cfg if t == spec.technique else None)
@@ -730,7 +806,8 @@ def sweep(
                         for k, v in results[t]["totals"].items()},
                 engine_spans=obs.engine_stat(
                     _engine_key(pspec, shard=shard,
-                                faulted=faults is not None)),
+                                faulted=faults is not None,
+                                fault_axis=_trace_stacked(faults))),
                 extra={"labels": labels,
                        "grid": {name: list(pts) for name, pts in grid.items()}})
             obs.write_record(rec, record if isinstance(record, str) else None)
@@ -770,7 +847,7 @@ def _sweep_resumable(point_spec, envs, techniques, labels, *, faults, shard,
         tuple(labels), tuple(techniques), chunk_points,
         sig_spec.objective, sig_spec.hours, sig_spec.routed,
         sig_spec.failover, sig_spec.guard, sig_spec.seed,
-        faults is not None,
+        sig_spec.workload, faults is not None, _trace_stacked(faults),
     )).encode()).hexdigest()[:16]
     journal = FL.SweepJournal(resume_dir, sig)
     monitor = FT.HeartbeatMonitor(num_workers=len(plan),
@@ -780,14 +857,18 @@ def _sweep_resumable(point_spec, envs, techniques, labels, *, faults, shard,
     computed_steps: List[int] = []
     pending: Dict[int, Dict[str, Any]] = {}
 
+    stacked = _trace_stacked(faults)
+
     def step_fn(step):
         FL.check_kill_switch()
         t, start, end = plan[step]
         pspec = point_spec(t, end - start)
         env_b = E.stack_envs(envs[start:end])
+        chunk_faults = (jax.tree_util.tree_map(lambda x: x[start:end], faults)
+                        if stacked else faults)
         t0 = _time.perf_counter()
         res = FL.call_with_timeout(
-            lambda: _run_batched(pspec, env_b, None, shard, faults),
+            lambda: _run_batched(pspec, env_b, None, shard, chunk_faults),
             point_timeout_s, label=f"chunk {step} ({t}[{start}:{end}])")
         monitor.record(step, _time.perf_counter() - t0)
         pending[step] = {"totals": {k: np.asarray(v)

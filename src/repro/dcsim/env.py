@@ -35,6 +35,17 @@ SLA miss cost         (I, D)     $/h = sla_price · AR · p_miss(latency, sla_ms
 routed SLA miss cost  (S, I, D)  $/h priced per (source, task) path
 ====================  =========  =================================================
 
+Token units (``workload="llm"``, the capability layer in
+``dcsim.capability``): task types are model families and every field above
+keeps its unit — only the derivation changes. One "task" is one request of
+``prompt_mean + output_mean`` tokens, so ``er`` is requests/h derived from
+roofline tokens/sec/chip summed over the DC's accelerator mix, service time
+``3.6e6 / er`` ms is the request's prefill + decode walltime, ``it_dyn`` is
+the accelerator fleet's peak draw with J/token × tokens/s/chip ==
+dynamic W/chip by construction, and ``sizes`` is the request's token payload
+in GB. The solvers cannot tell the difference — ``EnvParams`` is the whole
+interface.
+
 Beyond-paper extensions for the scenario engine (``repro.scenarios``):
 ``carbon`` carries an hourly axis (D, 24) so grid carbon-intensity events
 (spikes, diurnal marginal-carbon shapes) are expressible, and ``avail``
@@ -64,7 +75,8 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from . import colocation, latency, power, renewables, topology, workload
+from . import capability, latency, renewables, topology
+from . import workload as _workload
 from .topology import CRAC_MAX_W, CRAC_PER_DC, NETWORK_PRICE, NODES_PER_DC
 
 
@@ -104,15 +116,26 @@ def build_env(
     utilization: float = 0.45,
     include_tpu: bool = False,
     renewable_scale: float = 0.8,
+    workload: "str | capability.WorkloadModel" = "aibench",
 ) -> EnvParams:
+    """Build one day's EnvParams for ``num_dcs`` data centers.
+
+    ``workload`` selects the capability layer (``dcsim.capability``)
+    that derives the per-(task, DC) serving numbers — ``er``, IT power,
+    payload ``sizes``, default ``sla_ms`` and the task-type count ``I``:
+
+    - ``"aibench"`` (default): the paper's ten AIBench task types on the
+      Xeon fleet; bit-for-bit identical to the pre-capability-layer env.
+    - ``"llm"``: model-zoo families on the accelerator fleet, derived from
+      the roofline (tokens/sec/chip, J/token — see ``capability.py``).
+    - any registered name or a ``WorkloadModel`` instance.
+    """
     locs = topology.dc_locations(num_dcs)
     loc_rows = [topology.LOCATIONS[i] for i in locs]
-    nn = topology.node_mix(seed, num_dcs, include_tpu=include_tpu)
-    er = colocation.er_table(nn)  # (I, D) tasks/h
-
-    idle, dyn = power.node_power_arrays(nn.shape[1])
-    it_idle = nn @ idle
-    it_dyn = nn @ dyn
+    wl = capability.resolve(workload, include_tpu=include_tpu)
+    cap = wl.capabilities(num_dcs, seed)
+    er, it_idle, it_dyn = cap.er, cap.it_idle, cap.it_dyn
+    num_tasks = er.shape[0]
     rng = np.random.default_rng(seed + 17)
     tsupply = rng.uniform(16.0, 24.0, num_dcs)
     eff = rng.uniform(1.10, 1.25, num_dcs)
@@ -138,31 +161,30 @@ def build_env(
     rp = renewables.renewable_profile(tz, solar_cap, wind_cap, 1.0, month, seed)
     rp = rp * installed[:, None]
 
-    sizes = np.array([t[2] for t in topology.TASK_TYPES])
     # peak rate per type via workload.base_rates (one source of truth for the
     # Dirichlet task mix): w_i (Σw=1) of its own capacity × utilization, so
     # total utilization Σ_i CAR_i/cap_i peaks near ``utilization``.
-    base = workload.base_rates(np.asarray(er).sum(axis=1), utilization)
-    car = workload.arrival_pattern(pattern, base, seed=seed)
+    base = _workload.base_rates(np.asarray(er).sum(axis=1), utilization)
+    car = _workload.arrival_pattern(pattern, base, seed=seed)
 
     f = jnp.asarray
     return EnvParams(
         er=f(er), it_idle=f(it_idle), it_dyn=f(it_dyn), tsupply=f(tsupply),
         eff=f(eff), rp=f(rp), carbon=f(np.tile(carbon[:, None], (1, 24))),
         eprice=f(eprice), peak_price=f(peak_price), alpha=f(alpha),
-        nprice=jnp.float32(NETWORK_PRICE), sizes=f(sizes),
-        nn_total=f(nn.sum(axis=1).astype(float)), car=f(car),
+        nprice=jnp.float32(NETWORK_PRICE), sizes=f(cap.sizes),
+        nn_total=f(cap.nn_total), car=f(car),
         avail=jnp.ones((num_dcs, 24)),
         # SLA/latency defaults: the paper's model (no WAN delay, misses
         # unpriced). sla_ms is a finite slack target so sla_tighten scales it.
         rtt=jnp.zeros((num_dcs, num_dcs)),
-        sla_ms=f(latency.default_sla_ms(er, nn.sum(axis=1))),
-        sla_price=jnp.zeros(len(sizes)),
+        sla_ms=f(cap.sla_ms),
+        sla_price=jnp.zeros(num_tasks),
         sla_weight=jnp.float32(1.0),
         # demand origins: uniform across the DC regions (S = D). Routing only
         # matters once rtt is non-zero and origins are shifted; the default
         # reduces the routed model to the paper's exactly.
-        origin=jnp.full((num_dcs, len(sizes), 24), 1.0 / num_dcs),
+        origin=jnp.full((num_dcs, num_tasks, 24), 1.0 / num_dcs),
     )
 
 

@@ -125,6 +125,78 @@ CRAC_MAX_W = 120_000.0  # per CRAC unit rating
 NETWORK_PRICE = 0.085   # $/GB (AWS CloudFront-shaped)
 
 
+# ---------------------------------------------------------------------------
+# Accelerator fleet (beyond-paper, the token-grounded "llm" workload model).
+# Each accelerator node is one host of ``chips`` chips; per-chip peak compute,
+# HBM bandwidth/capacity, and interconnect bandwidth are expressed relative to
+# the measured TPU-v5e roofline constants in ``launch/roofline.py`` so the
+# capability layer's derived tokens/sec stay anchored to the same hardware
+# model the roofline analyzer uses. idle_w/dyn_w are hardware-spec node power
+# draws (the one kind of constant the llm path is allowed: hardware, never
+# per-task execution times).
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass(frozen=True)
+class AccelType:
+    name: str
+    chips: int          # chips per node (host)
+    peak_flops: float   # per chip, bf16 FLOP/s
+    hbm_bw: float       # per chip, bytes/s
+    hbm_gb: float       # per chip, GiB of HBM
+    ici_bw: float       # per chip, interconnect bytes/s
+    idle_w: float       # node idle power, W
+    dyn_w: float        # node peak dynamic power, W
+
+
+def _accel_types() -> Tuple[AccelType, ...]:
+    from ..launch import roofline as R  # namespace pkg, constants only
+
+    return (
+        # previous generation: weaker compute, more HBM per chip
+        AccelType("tpu-gen-a", 4, 0.70 * R.PEAK_FLOPS, 0.75 * R.HBM_BW,
+                  32.0, 0.90 * R.ICI_BW, 140.0, 1000.0),
+        # the roofline-measured v5e-class host (1x by construction)
+        AccelType("tpu-gen-b", 4, 1.00 * R.PEAK_FLOPS, 1.00 * R.HBM_BW,
+                  16.0, 1.00 * R.ICI_BW, 120.0, 1100.0),
+        # large-model generation: big HBM, fat interconnect
+        AccelType("tpu-gen-c", 4, 2.33 * R.PEAK_FLOPS, 3.35 * R.HBM_BW,
+                  95.0, 2.00 * R.ICI_BW, 220.0, 2600.0),
+    )
+
+
+ACCEL_TYPES: Tuple[AccelType, ...] = _accel_types()
+
+# one accelerator aisle's worth of hosts per DC (mirrors the include_tpu
+# carve-out in ``node_mix``)
+ACCEL_NODES_PER_DC = NODES_PER_DC // AISLES_PER_DC
+
+
+def accel_mix(seed: int, num_dcs: int,
+              num_accel_types: int | None = None,
+              nodes_per_dc: int = ACCEL_NODES_PER_DC) -> np.ndarray:
+    """NN[d, a]: accelerator node counts per DC, rows sum to ``nodes_per_dc``.
+
+    Mirrors ``node_mix``'s heterogeneity story for the accelerator fleet:
+    most DCs run a dirichlet blend of generations; every 3rd DC is a
+    single-generation fleet (procurement waves are lumpy). Seeded off a
+    distinct stream (``seed + 101``) so the Xeon and accelerator mixes of
+    one scenario seed are independent draws.
+    """
+    if num_accel_types is None:
+        num_accel_types = len(ACCEL_TYPES)
+    rng = np.random.default_rng(seed + 101)
+    out = np.zeros((num_dcs, num_accel_types), np.int64)
+    for d in range(num_dcs):
+        if d % 3 == 2 and num_accel_types > 1:  # single-generation fleet
+            out[d, int(rng.integers(num_accel_types))] = nodes_per_dc
+            continue
+        w = rng.dirichlet(np.ones(num_accel_types) * 2.0)
+        for a in range(num_accel_types):
+            out[d, a] = int(round(w[a] * nodes_per_dc))
+        out[d] = _fix_sum(out[d], nodes_per_dc)
+    return out
+
+
 def node_mix(seed: int, num_dcs: int, include_tpu: bool = False) -> np.ndarray:
     """NN[d, j]: heterogeneous node counts per DC, rows sum to 4320.
 

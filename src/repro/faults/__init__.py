@@ -40,11 +40,12 @@ from .guard import guard_fractions
 from .resume import (KilledMidSweep, PointTimeout, SweepJournal,
                      call_with_timeout, check_kill_switch, inject_kill_after)
 from .trace import (FaultTrace, brownout, compose, dc_crash, no_faults,
-                    random_trace, telemetry_dropout, wan_partition)
+                    random_trace, stack_traces, telemetry_dropout,
+                    wan_partition)
 
 __all__ = [
     "FaultTrace", "no_faults", "dc_crash", "brownout", "wan_partition",
-    "telemetry_dropout", "compose", "random_trace",
+    "telemetry_dropout", "compose", "random_trace", "stack_traces",
     "POLICIES", "DEFAULT_POLICY", "realized_env", "apply_failover",
     "execute_hour", "guard_fractions",
     "SweepJournal", "KilledMidSweep", "PointTimeout", "call_with_timeout",

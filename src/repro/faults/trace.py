@@ -149,6 +149,24 @@ def compose(*traces: FaultTrace) -> FaultTrace:
     return out
 
 
+def stack_traces(traces: Sequence[FaultTrace]) -> FaultTrace:
+    """Stack per-point traces leaf-wise into one batched FaultTrace.
+
+    The leading axis lines up with a batched engine's env rows (one realized
+    day of trouble per scenario/grid point); ``run``/``sweep`` detect the
+    extra axis and vmap the trace alongside the envs instead of replicating
+    one shared trace.
+    """
+    traces = list(traces)
+    if not traces:
+        raise ValueError("stack_traces() needs at least one trace")
+    shapes = {t.avail_mult.shape for t in traces}
+    if len(shapes) != 1:
+        raise ValueError(f"traces disagree on (D, hours): {sorted(shapes)}")
+    return FaultTrace(*(jnp.stack([getattr(t, f) for t in traces])
+                        for f in FaultTrace._fields))
+
+
 _KINDS = ("dc_crash", "brownout", "wan_partition", "telemetry_dropout")
 
 

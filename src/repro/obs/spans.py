@@ -108,14 +108,16 @@ _evictions: int = 0
 def engine_key_str(key: tuple) -> str:
     """Compact, human-scannable form of an engine compile key:
     ``kind:technique:objective:h<hours>:cfg=<...>:routed=<...>:
-    faults=<policy|off>:guard=<on|off>:taps=<...>``."""
+    wl=<workload>:faults=<policy|off[/point]>:guard=<on|off>:taps=<...>``."""
     (kind, technique, objective, hours, cfg, routed, failover, guard,
-     faulted, taps) = key
+     workload, faulted, fault_axis, taps) = key
     cfg_s = "default" if cfg is None else type(cfg).__name__
     taps_s = ",".join(sorted(taps)) if taps else "off"
     faults_s = failover if faulted else "off"
+    if faulted and fault_axis:
+        faults_s += "/point"  # one trace per env row
     return (f"{kind}:{technique}:{objective}:h{hours}:cfg={cfg_s}:"
-            f"routed={bool(routed)}:faults={faults_s}:"
+            f"routed={bool(routed)}:wl={workload}:faults={faults_s}:"
             f"guard={'on' if guard else 'off'}:taps={taps_s}")
 
 

@@ -279,3 +279,53 @@ def arrival_resample(seed: int = 0, std: float = 0.2) -> Transform:
         car = workload.resample_car(np.asarray(env.car), seed, std)
         return env._replace(car=jnp.asarray(car, env.car.dtype))
     return t
+
+
+@register("workload_mix_shift", severity="weight")
+def workload_mix_shift(toward: Sequence[int] = (0,), weight: float = 0.5,
+                       start: int = 0, duration: int = 24) -> Transform:
+    """Shift the *workload mix* toward the given task types / model families.
+
+    In the window, each hour's arrivals become the convex blend
+    ``(1 - weight) · car + weight · (hourly total on uniform(toward))`` —
+    total arrivals per hour are preserved, but their composition tilts (a
+    chat-model launch day, an image-gen fad). This is the workload-mix
+    severity axis orthogonal to grid events: under the llm capability layer
+    the targets are model families with very different tokens/sec and
+    J/token, so the same total traffic can demand radically different
+    fleets. Workload-agnostic (any ``I``).
+    """
+    def t(env: EnvParams) -> EnvParams:
+        car = np.asarray(env.car, dtype=float)                # (I, 24)
+        target = np.zeros(car.shape[0])
+        target[np.asarray(toward)] = 1.0 / len(toward)
+        w = weight * _window(start, duration)                  # (24,)
+        total = car.sum(axis=0, keepdims=True)                 # (1, 24)
+        shifted = (1.0 - w)[None] * car + w[None] * target[:, None] * total
+        return env._replace(car=jnp.asarray(shifted, env.car.dtype))
+    return t
+
+
+@register("context_length_surge", severity="factor")
+def context_length_surge(factor: float = 2.0,
+                         tasks: Optional[Sequence[int]] = None) -> Transform:
+    """Requests get ``factor``× longer (prompts + outputs) for the selected
+    task types — a long-document season, an agentic-trace regime shift.
+
+    The honest EnvParams-level approximation of a token-length shift: the
+    per-request work scales with the tokens served, so the selected rows'
+    execution rate ``er`` divides by ``factor`` (service time in the M/M/c
+    model is ``3.6e6 / er`` ms — it stretches by exactly ``factor``) and the
+    per-request network payload ``sizes`` multiplies by it. Whole-day (no
+    window): ``er`` is static per env — sweep the factor axis for a
+    severity curve. Workload-agnostic, though the factor is only *derived*
+    under the llm capability layer's token units.
+    """
+    def t(env: EnvParams) -> EnvParams:
+        rows = _rows(env.er.shape[0], tasks)                   # (I,)
+        er_scale = np.where(rows > 0, 1.0 / factor, 1.0)
+        sz_scale = np.where(rows > 0, factor, 1.0)
+        return env._replace(
+            er=env.er * jnp.asarray(er_scale, env.er.dtype)[:, None],
+            sizes=env.sizes * jnp.asarray(sz_scale, env.sizes.dtype))
+    return t

@@ -1,0 +1,284 @@
+"""Capability layer (``dcsim.capability``): the aibench default is pinned
+bit-for-bit to the pre-layer constants, the llm model's derived numbers are
+unit-consistent with the roofline (tokens/s/chip × J/token == dynamic W/chip;
+er monotone in node counts), the task-type axis ``I`` is fully data-driven
+(an I=6 llm env runs all six solvers on scan/batched/month), and per-point
+stacked FaultTraces reproduce their per-row single runs."""
+import dataclasses
+
+import numpy as np
+import pytest
+
+from repro import faults as FL
+from repro import scenarios as S
+from repro.core import ExperimentSpec, run, sweep
+from repro.core import gt_drl
+from repro.core import schedulers as SCH
+from repro.core.ddpg import DDPGConfig
+from repro.core.force_directed import FDConfig
+from repro.core.genetic import GAConfig
+from repro.core.nash import NashConfig
+from repro.core.ppo import PPOConfig
+from repro.core.ppo_joint import JointPPOConfig
+from repro.dcsim import capability as C
+from repro.dcsim import colocation, env as E, latency, power, topology
+
+ENV = E.build_env(4, seed=0)
+LLM_ENV = E.build_env(4, seed=0, workload="llm")
+
+
+# ---------------------------------------------------------------------------
+# aibench: the extracted implementation IS the old constants, bit for bit
+# ---------------------------------------------------------------------------
+
+def test_aibench_pin_bit_for_bit():
+    """build_env(workload="aibench") == the default == the pre-layer env."""
+    explicit = E.build_env(4, seed=0, workload="aibench")
+    instance = E.build_env(4, seed=0, workload=C.AIBenchWorkload())
+    for f, a, b, c in zip(ENV._fields, ENV, explicit, instance):
+        assert a.dtype == b.dtype == c.dtype, f
+        assert bool((a == b).all()) and bool((a == c).all()), f
+
+
+def test_aibench_bundle_matches_direct_construction():
+    """The bundle's fields are exactly the pre-layer build_env ops."""
+    cap = C.AIBenchWorkload().capabilities(4, seed=0)
+    nn = topology.node_mix(0, 4)
+    er = colocation.er_table(nn)
+    idle, dyn = power.node_power_arrays(nn.shape[1])
+    np.testing.assert_array_equal(cap.er, er)
+    np.testing.assert_array_equal(cap.it_idle, nn @ idle)
+    np.testing.assert_array_equal(cap.it_dyn, nn @ dyn)
+    np.testing.assert_array_equal(cap.nn_total, nn.sum(axis=1).astype(float))
+    np.testing.assert_array_equal(
+        cap.sizes, [t[2] for t in topology.TASK_TYPES])
+    np.testing.assert_array_equal(
+        cap.sla_ms, latency.default_sla_ms(er, nn.sum(axis=1)))
+    assert cap.task_names == tuple(t[0] for t in topology.TASK_TYPES)
+
+
+def test_include_tpu_is_aibench_only():
+    with pytest.raises(ValueError):
+        E.build_env(4, seed=0, workload="llm", include_tpu=True)
+    with pytest.raises(ValueError):
+        C.resolve(C.LLMWorkload(), include_tpu=True)
+
+
+# ---------------------------------------------------------------------------
+# llm: unit consistency of the derived numbers
+# ---------------------------------------------------------------------------
+
+def test_llm_tokens_joules_watts_identity():
+    """tokens/s/chip × J/token == dynamic W per chip, per (family, accel)."""
+    cap = C.LLMWorkload().capabilities(4, seed=0)
+    tok = cap.meta["tokens_per_s_chip"]
+    jt = cap.meta["j_per_token"]
+    dyn_per_chip = np.array([a.dyn_w / a.chips for a in topology.ACCEL_TYPES])
+    np.testing.assert_allclose(tok * jt,
+                               np.broadcast_to(dyn_per_chip, tok.shape),
+                               rtol=1e-6)
+
+
+def test_llm_er_monotone_in_node_counts():
+    """Adding accelerator nodes to a DC never lowers any family's er."""
+    wl = C.LLMWorkload()
+    cap = wl.capabilities(4, seed=0)
+    nn = cap.meta["nn"]
+    rates = cap.meta["tasks_per_h_node"]        # (I, A), all positive
+    assert (rates > 0).all()
+    bigger = nn.copy()
+    bigger[2] += 7                               # more nodes of every type
+    er_big = rates @ bigger.T.astype(float)
+    assert (er_big[:, 2] > cap.er[:, 2]).all()
+    np.testing.assert_array_equal(er_big[:, [0, 1, 3]], cap.er[:, [0, 1, 3]])
+
+
+def test_aibench_er_monotone_in_node_counts():
+    """Same monotonicity through the AIBench colocation table."""
+    nn = topology.node_mix(0, 4)
+    er = colocation.er_table(nn)
+    bigger = nn.copy()
+    bigger[1] += 11
+    er_big = colocation.er_table(bigger)
+    assert (np.asarray(er_big)[:, 1] > np.asarray(er)[:, 1]).all()
+
+
+def test_llm_derivation_shape_and_physics():
+    """Structural sanity of the roofline derivation: shapes line up with the
+    family count, bigger models are strictly slower per chip, and the
+    service-time the M/M/c model sees is finite and positive."""
+    wl = C.LLMWorkload()
+    cap = wl.capabilities(4, seed=0)
+    i, d = cap.er.shape
+    assert i == len(C.LLM_FAMILIES) and d == 4
+    assert len(cap.task_names) == i == len(cap.sizes) == len(cap.sla_ms)
+    fams = dict(C.LLM_FAMILIES)
+    tok = dict(zip(cap.task_names, cap.meta["tokens_per_s_chip"]))
+    # 1B chat decodes faster than 7B, which beats the 123B dense model
+    assert (tok["chat-1b"] > tok["chat-7b"]).all()
+    assert (tok["chat-7b"] > tok["dense-large"]).all()
+    # a 480B model cannot fit one chip anywhere
+    n_chips = dict(zip(cap.task_names, cap.meta["n_chips"]))
+    assert (n_chips["moe-480b"] > 1).all()
+    assert np.isfinite(latency.service_ms(cap.er, cap.nn_total)).all()
+    assert (cap.er > 0).all() and (cap.sla_ms > 0).all()
+
+
+def test_llm_no_per_task_time_constants():
+    """The llm path never touches the AIBench execution-time tables."""
+    import inspect
+
+    src = inspect.getsource(C)
+    assert "TASK_TYPES" not in src.split("class LLMWorkload")[1].split(
+        "class ")[0]
+    assert "base_time_table" not in src
+
+
+# ---------------------------------------------------------------------------
+# the task-type axis is data-driven: I = 6 through every engine + solver
+# ---------------------------------------------------------------------------
+
+_TINY_PPO = PPOConfig(horizon=2, episodes=4, iters=1, update_epochs=1)
+TINY = {
+    "fd": FDConfig(iters=5),
+    "ga": GAConfig(population=6, generations=4),
+    "nash": NashConfig(sweeps=1, inner_steps=5),
+    "ddpg": DDPGConfig(steps=8, batch=4, buffer=16, warmup=4),
+    "ppo": JointPPOConfig(ppo=_TINY_PPO),
+    "gt-drl": gt_drl.GTDRLConfig(ppo=_TINY_PPO, rounds=1, polish_steps=2,
+                                 pretrain_iters=2, pretrain_batch=1),
+}
+
+
+@pytest.mark.parametrize("technique", SCH.TECHNIQUES)
+def test_llm_env_runs_every_solver_on_scan(technique):
+    spec = ExperimentSpec(technique=technique, hours=2, workload="llm",
+                          cfg=TINY[technique])
+    res = run(spec, LLM_ENV)
+    assert np.isfinite(res["totals"]["carbon_kg"])
+    assert len(res["per_epoch"]) == 2
+
+
+@pytest.mark.parametrize("technique", SCH.TECHNIQUES)
+def test_llm_env_runs_batched_and_month(technique):
+    spec = ExperimentSpec(technique=technique, hours=2, workload="llm",
+                          cfg=TINY[technique])
+    rb = run(spec.replace(engine="batched"), [LLM_ENV, LLM_ENV])
+    assert rb["totals"]["carbon_kg"].shape == (2,)
+    assert np.all(np.isfinite(rb["totals"]["carbon_kg"]))
+    rm = run(spec.replace(engine="month", days=2), LLM_ENV)
+    assert rm["days"] == 2 and np.isfinite(rm["totals"]["carbon_kg"])
+
+
+def test_workload_field_forks_the_compile_key():
+    from repro.core import experiment as X
+
+    spec = ExperimentSpec(technique="fd", hours=2, cfg=TINY["fd"])
+    assert X._engine_key(spec) != X._engine_key(spec.replace(workload="llm"))
+    with pytest.raises(ValueError):
+        ExperimentSpec(workload=C.LLMWorkload())  # names only, not instances
+
+
+def test_custom_workload_registration():
+    class Tiny(C.WorkloadModel):
+        name = "tiny-test"
+
+        def capabilities(self, num_dcs, seed):
+            i = 3
+            er = np.full((i, num_dcs), 1e6)
+            nn_total = np.full(num_dcs, 100.0)
+            return C.CapabilityBundle(
+                task_names=("a", "b", "c"), er=er,
+                it_idle=np.full(num_dcs, 1e4), it_dyn=np.full(num_dcs, 1e5),
+                nn_total=nn_total, sizes=np.full(i, 0.1),
+                sla_ms=latency.default_sla_ms(er, nn_total), meta={})
+
+    C.register_workload("tiny-test", Tiny)
+    try:
+        assert "tiny-test" in C.workload_names()
+        env = E.build_env(4, seed=0, workload="tiny-test")
+        assert env.er.shape == (3, 4)
+        res = run(ExperimentSpec(technique="fd", hours=2, cfg=TINY["fd"],
+                                 workload="tiny-test"), env)
+        assert np.isfinite(res["totals"]["cost_usd"])
+    finally:
+        C._REGISTRY.pop("tiny-test", None)
+
+
+# ---------------------------------------------------------------------------
+# workload-axis scenario transforms
+# ---------------------------------------------------------------------------
+
+def test_workload_mix_shift_preserves_hourly_totals():
+    shifted = S.make("workload_mix_shift", toward=(4,), weight=0.6)(LLM_ENV)
+    np.testing.assert_allclose(np.asarray(shifted.car).sum(axis=0),
+                               np.asarray(LLM_ENV.car).sum(axis=0), rtol=1e-5)
+    # mass moved toward the target family
+    assert (np.asarray(shifted.car)[4] >= np.asarray(LLM_ENV.car)[4]).all()
+
+
+def test_context_length_surge_stretches_service_time():
+    surged = S.make("context_length_surge", factor=2.0, tasks=(1,))(LLM_ENV)
+    np.testing.assert_allclose(np.asarray(surged.er)[1],
+                               np.asarray(LLM_ENV.er)[1] / 2.0, rtol=1e-6)
+    np.testing.assert_allclose(np.asarray(surged.sizes)[1],
+                               np.asarray(LLM_ENV.sizes)[1] * 2.0, rtol=1e-6)
+    np.testing.assert_array_equal(np.asarray(surged.er)[0],
+                                  np.asarray(LLM_ENV.er)[0])
+    # service time in the M/M/c model stretches by exactly the factor
+    np.testing.assert_allclose(
+        np.asarray(latency.service_ms(surged.er, surged.nn_total))[1],
+        2.0 * np.asarray(latency.service_ms(LLM_ENV.er, LLM_ENV.nn_total))[1],
+        rtol=1e-5)
+
+
+# ---------------------------------------------------------------------------
+# per-point fault traces (satellite): stacked == per-row singles
+# ---------------------------------------------------------------------------
+
+def test_stack_traces_shape_and_validation():
+    traces = [FL.random_trace(ENV, seed=s) for s in range(3)]
+    st = FL.stack_traces(traces)
+    assert st.avail_mult.shape == (3,) + traces[0].avail_mult.shape
+    assert st.rtt_extra_ms.shape == (3,) + traces[0].rtt_extra_ms.shape
+    with pytest.raises(ValueError):
+        FL.stack_traces([])
+    with pytest.raises(ValueError):
+        FL.stack_traces([traces[0], FL.no_faults(8)])
+
+
+def test_per_point_traces_match_single_runs():
+    cfg = FDConfig(iters=5)
+    envs = [S.make("arrival_resample", std=0.1)(ENV), ENV]
+    traces = [FL.random_trace(ENV, seed=s) for s in (3, 4)]
+    spec = ExperimentSpec(technique="fd", engine="batched", hours=3, cfg=cfg)
+    res = run(spec, envs, faults=FL.stack_traces(traces))
+    for i, (e, t) in enumerate(zip(envs, traces)):
+        single = run(spec.replace(seeds=(i,)), [e], faults=t)
+        for k in res["totals"]:
+            np.testing.assert_allclose(res["totals"][k][i],
+                                       single["totals"][k][0],
+                                       rtol=1e-5, atol=1e-5, err_msg=k)
+
+
+def test_per_point_traces_reject_mismatch_and_scan():
+    cfg = FDConfig(iters=5)
+    stacked = FL.stack_traces([FL.random_trace(ENV, seed=0)] * 3)
+    spec = ExperimentSpec(technique="fd", engine="batched", hours=3, cfg=cfg)
+    with pytest.raises(ValueError):
+        run(spec, [ENV, ENV], faults=stacked)     # 3 traces, 2 envs
+    with pytest.raises(ValueError):
+        run(spec.replace(engine="scan"), ENV, faults=stacked)
+
+
+def test_sweep_accepts_per_point_trace_sequence():
+    cfg = FDConfig(iters=5)
+    spec = ExperimentSpec(technique="fd", hours=3, cfg=cfg)
+    grid = {"origin_shift": (0.0, 0.8)}
+    traces = [FL.dc_crash(ENV, dc=0, start=0, duration=3),
+              FL.no_faults(ENV)]
+    res = sweep(spec, grid, base_env=ENV, faults=traces)
+    unserved = res["results"]["fd"]["totals"]["unserved_demand"]
+    assert unserved.shape == (2,)
+    # the crash-trace point sheds load; the no-fault point cannot
+    assert unserved[1] == 0.0

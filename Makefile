@@ -2,13 +2,25 @@
 PY ?= python
 export PYTHONPATH := src$(if $(PYTHONPATH),:$(PYTHONPATH))
 
-.PHONY: check bench bench-quick bench-scenarios bench-smoke sweep-smoke \
+.PHONY: check lint bench bench-quick bench-scenarios bench-smoke sweep-smoke \
         obs-smoke faults-smoke llm-smoke scoreboard
 
 # PYTEST_ARGS lets CI add plugins the container image lacks
 # (e.g. PYTEST_ARGS="--timeout=300" with pytest-timeout installed)
 check:
 	$(PY) -m pytest -x -q $(PYTEST_ARGS)
+
+# static analysis: the repo-native pass (trace purity, compile-key
+# completeness, pytree schemas, tap registry — see README "Static
+# analysis") plus ruff when available (pinned in requirements-dev.txt;
+# skipped, not failed, where it isn't installed)
+lint:
+	$(PY) -m repro.lint
+	@if $(PY) -m ruff --version >/dev/null 2>&1; then \
+		$(PY) -m ruff check . ; \
+	else \
+		echo "ruff not installed; skipping (pip install -r requirements-dev.txt)" ; \
+	fi
 
 bench:
 	$(PY) -m benchmarks.run

@@ -3,7 +3,7 @@ from __future__ import annotations
 
 from repro.core.schedulers import compare_techniques
 
-from .common import HOURS, RUNS, TECHNIQUES, Timer, build_envs, emit
+from .common import HOURS, TECHNIQUES, Timer, build_envs, emit
 
 
 def run(rows) -> dict:

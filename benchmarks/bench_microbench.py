@@ -15,13 +15,12 @@ import jax.numpy as jnp
 from repro.configs import get_config
 from repro.core import gt_drl, nash
 from repro.core.game import GameContext
-from repro.core.ppo import PPOConfig
 from repro.data.tokens import TokenPipeline
 from repro.dcsim import env as E
 from repro.optim.adamw import AdamWConfig
 from repro.train.step import init_train_state, train_step
 
-from .common import Timer, emit
+from .common import emit
 
 
 def _time(fn, n=5):

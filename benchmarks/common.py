@@ -2,7 +2,7 @@
 from __future__ import annotations
 
 import os
-from typing import Dict, List
+from typing import List
 
 from repro import obs
 from repro.dcsim import env as E

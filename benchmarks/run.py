@@ -12,7 +12,6 @@ from __future__ import annotations
 
 import argparse
 import json
-import sys
 import time
 
 ALL = ("carbon", "scalability", "arrival", "renewables", "costs", "scenarios",

@@ -6,12 +6,13 @@ minimal version of the paper's Fig. 7 experiment.
 
     PYTHONPATH=src python examples/quickstart.py
 """
-import sys, os
+import os
+import sys
 sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
 
 import jax.numpy as jnp
 
-from repro.core.game import GameContext, cloud_objective, nash_residual, uniform_fractions
+from repro.core.game import GameContext, cloud_objective, uniform_fractions
 from repro.core.schedulers import run_day
 from repro.dcsim import env as E
 

@@ -17,7 +17,8 @@ and the totals match an unkilled run exactly.
     PYTHONPATH=src python examples/run_faults.py
     PYTHONPATH=src python examples/run_faults.py --quick   # make faults-smoke
 """
-import sys, os
+import os
+import sys
 sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
 
 import argparse
@@ -95,7 +96,7 @@ def main():
 
     env = E.build_env(args.dcs, seed=0)
     t0 = time.time()
-    print(f"— realized faults: DC 1 crash + 0↔2 WAN partition, "
+    print("— realized faults: DC 1 crash + 0↔2 WAN partition, "
           f"{args.hours}h day, technique={args.technique} —")
     faulted_day(env, args.hours, args.technique)
     print("\n— kill/resume severity sweep —")

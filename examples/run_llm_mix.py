@@ -16,7 +16,8 @@ capability tables.
     PYTHONPATH=src python examples/run_llm_mix.py
     PYTHONPATH=src python examples/run_llm_mix.py --quick   # make llm-smoke
 """
-import sys, os
+import os
+import sys
 sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
 
 import argparse
@@ -82,7 +83,7 @@ def main():
     day = S.make("workload_mix_shift", toward=(moe,), weight=args.weight,
                  start=8, duration=10)(env)
 
-    print(f"\nsix techniques on the mix-shift day "
+    print("\nsix techniques on the mix-shift day "
           f"(weight={args.weight} toward moe-480b, hours={hours}):\n")
     print(f"{'technique':10s} {'carbon_kg':>11s} {'cost_usd':>11s} "
           f"{'violation':>10s} {'wall_s':>7s}")
@@ -107,7 +108,7 @@ def main():
                               cfg=SMOKE_CFGS["fd"] if args.quick else None),
                env)
     print(f"\nfd on the unshifted day: {base['totals']['carbon_kg']:.1f} kg "
-          f"(mix shift moves the demanded J/token, same hourly arrivals); "
+          "(mix shift moves the demanded J/token, same hourly arrivals); "
           f"all six techniques finite on the derived I={len(names)} env.")
 
 

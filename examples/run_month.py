@@ -7,7 +7,8 @@ the monthly peak-demand state — the peak charge becomes a planning signal:
 
 Prints per-day carbon / cost / running monthly peak, then the month totals.
 """
-import sys, os
+import os
+import sys
 sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
 
 import argparse

@@ -12,7 +12,8 @@ with both priced by the same routed simulator.
     PYTHONPATH=src python examples/run_routing.py --techniques fd,nash,gt-drl
     PYTHONPATH=src python examples/run_routing.py --hours 12 --scenario west-evening
 """
-import sys, os
+import os
+import sys
 sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
 
 import argparse

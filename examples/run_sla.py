@@ -12,7 +12,8 @@ bill), the SLA-miss bill alone, carbon, and the request-weighted mean
 latency — so the carbon/cost-vs-performance trade the paper claims "without
 compromising computational performance" is finally measurable.
 """
-import sys, os
+import os
+import sys
 sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
 
 import argparse

@@ -14,7 +14,8 @@ keeps requests near their origins.
     PYTHONPATH=src python examples/run_sweep.py --hours 12 --factors 1,2,4,8
     PYTHONPATH=src python examples/run_sweep.py --quick      # smoke grid
 """
-import sys, os
+import os
+import sys
 sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
 
 import argparse
@@ -101,7 +102,7 @@ def main():
     b, r = sla["fd-blind"][-1], sla["fd"][-1]
     assert r < b, "routed fd must cut the SLA bill at the harshest point"
     print(f"\n{n_pts} grid points x 2 techniques in {wall:.1f}s "
-          f"(one batched compile each); at "
+          "(one batched compile each); at "
           f"{res['labels'][-1]}: routed fd cuts the SLA bill "
           f"{100.0 * (b - r) / b:.0f}% vs the source-blind split.")
 

@@ -4,7 +4,8 @@ monthly-peak cost dynamics printed as a table.
 
     PYTHONPATH=src python examples/schedule_day.py --objective carbon --dcs 4
 """
-import sys, os
+import os
+import sys
 sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
 
 import argparse

@@ -8,7 +8,8 @@ architecture describes.
 
     PYTHONPATH=src python examples/serve_fleet.py
 """
-import sys, os
+import os
+import sys
 sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
 
 import jax

@@ -6,7 +6,8 @@ simulated in ONE compiled vmapped call (run_days_batched):
 
 Prints a per-scenario carbon / cost / violation table plus the fleet totals.
 """
-import sys, os
+import os
+import sys
 sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
 
 import argparse

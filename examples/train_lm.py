@@ -8,7 +8,8 @@ resume path restore bitwise-identically.
 
     PYTHONPATH=src python examples/train_lm.py --steps 300
 """
-import sys, os
+import os
+import sys
 sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
 
 import argparse

@@ -23,7 +23,6 @@ import json
 import os
 import re
 import shutil
-import tempfile
 from typing import Any, Dict, Optional, Tuple
 
 import jax

@@ -7,8 +7,8 @@ source of truth holds the published hyper-parameters.
 from __future__ import annotations
 
 import dataclasses
-from dataclasses import dataclass, field
-from typing import Any, Dict, Optional, Tuple
+from dataclasses import dataclass
+from typing import Any, Dict, Tuple
 
 # ---------------------------------------------------------------------------
 # Block kinds used by hybrid / ssm architectures.

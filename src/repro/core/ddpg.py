@@ -9,14 +9,12 @@ the implementation standard so that finding reproduces honestly.
 from __future__ import annotations
 
 import dataclasses
-import functools
-from typing import Any, Dict, NamedTuple, Tuple
+from typing import Any, NamedTuple, Tuple
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
-from ..dcsim import env as E
 from ..optim.adamw import AdamWConfig, adamw_init, adamw_update
 from . import networks as nets
 from .game import GameContext, SolveResult, cloud_objective, uniform_fractions

@@ -110,10 +110,10 @@ class ExperimentSpec:
     engine: str = "scan"
     routed: bool = False
     hours: int = 24
-    days: Optional[int] = None            # month engine: env repeat count
-    seed: int = 0
-    seeds: Optional[Tuple[int, ...]] = None  # batched engine: one per env
-    pretrain: bool = True
+    days: Optional[int] = None            # lint: runtime-only(month engine env repeat count: scan length is data, the per-day program is one artifact)
+    seed: int = 0                         # lint: runtime-only(PRNG key material is a traced input, never part of the program)
+    seeds: Optional[Tuple[int, ...]] = None  # lint: runtime-only(batched engine per-env keys: vmapped runtime input)
+    pretrain: bool = True                 # lint: runtime-only(selects the initial solver state passed in at call time; the compiled epoch is identical)
     cfg: Any = None                       # solver config (frozen dataclass)
     taps: Optional[Tuple[str, ...]] = None   # obs tap patterns (None: ambient)
     failover: str = FL.DEFAULT_POLICY     # realized-fault failover policy
@@ -488,14 +488,14 @@ def run(
     under ``runs/`` (see ``repro.obs.records``).
     """
     if shard and spec.engine != "batched":
-        raise ValueError(f"shard=True needs engine='batched', "
+        raise ValueError("shard=True needs engine='batched', "
                          f"got {spec.engine!r}")
     if shard and spec.effective_taps():
         raise ValueError("taps stream through jax.debug.callback, which the "
                          "shard_map engine does not support; run shard=False "
                          "when tapping")
     if solver is not None and spec.engine != "loop":
-        raise ValueError(f"a prebuilt solver closure needs engine='loop', "
+        raise ValueError("a prebuilt solver closure needs engine='loop', "
                          f"got {spec.engine!r}")
     if peak_state0 is not None and spec.engine == "batched":
         raise ValueError("the batched engine starts every scenario-day from "

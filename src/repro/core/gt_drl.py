@@ -20,7 +20,7 @@ carries over: |S|·|D| per agent instead of |S|·|I|·|D| joint — and
 from __future__ import annotations
 
 import dataclasses
-from typing import Any, Dict, NamedTuple, Optional, Tuple
+from typing import Optional, Tuple
 
 import jax
 import jax.numpy as jnp
@@ -30,8 +30,7 @@ from .. import obs
 from ..dcsim import env as E
 from . import networks as nets
 from .game import GameContext, SolveResult, player_rewards, uniform_fractions
-from .ppo import (AgentState, PPOConfig, agent_init, average_agents,
-                  greedy_fractions, ppo_improve)
+from .ppo import AgentState, PPOConfig, agent_init, average_agents, ppo_improve
 
 
 @dataclasses.dataclass(frozen=True)
@@ -189,7 +188,7 @@ def _one_player_round(key, agent, env, tau, objective, peak_state, joint, i, mod
     # best-reply step — exploration can only help, never commit to a worse
     # basin.
     def polish(logits, _):
-        g = jax.grad(lambda l: -reward_of(l))(logits)
+        g = jax.grad(lambda lg: -reward_of(lg))(logits)
         return logits - polish_lr * g / (jnp.linalg.norm(g) + 1e-9), None
 
     def run_polish(logits0):

@@ -9,8 +9,6 @@ others fixed, until a full sweep improves nobody. Converges fast but to
 from __future__ import annotations
 
 import dataclasses
-import functools
-from typing import Tuple
 
 import jax
 import jax.numpy as jnp

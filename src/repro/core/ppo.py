@@ -12,7 +12,6 @@ update epochs are a scan over minibatch gradient steps.
 from __future__ import annotations
 
 import dataclasses
-import functools
 from typing import Any, Callable, Dict, NamedTuple, Tuple
 
 import jax

@@ -8,14 +8,13 @@ the game-theoretic decomposition, not implementation details.
 from __future__ import annotations
 
 import dataclasses
-from typing import Tuple
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
 from .game import GameContext, SolveResult, cloud_objective, uniform_fractions
-from .ppo import AgentState, PPOConfig, agent_init, greedy_fractions, ppo_improve
+from .ppo import PPOConfig, agent_init, ppo_improve
 from . import networks as nets
 
 
@@ -54,7 +53,7 @@ def solve_epoch(key, ctx: GameContext, peak_state: jnp.ndarray,
     logits = nets.actor_mean(agent.actor, f0.reshape(-1))
 
     def polish(lg, _):
-        g = jax.grad(lambda l: -reward_of(l))(lg)
+        g = jax.grad(lambda z: -reward_of(z))(lg)
         return lg - 0.4 * g / (jnp.linalg.norm(g) + 1e-9), None
 
     logits, _ = jax.lax.scan(polish, logits, None, length=30)

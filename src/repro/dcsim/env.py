@@ -68,8 +68,7 @@ the uniform-origin mean RTT), and is the parity reference for the engines.
 """
 from __future__ import annotations
 
-import dataclasses
-from typing import Any, Dict, NamedTuple, Optional, Tuple
+from typing import Dict, NamedTuple, Optional, Tuple
 
 import jax
 import jax.numpy as jnp
@@ -77,7 +76,7 @@ import numpy as np
 
 from . import capability, latency, renewables, topology
 from . import workload as _workload
-from .topology import CRAC_MAX_W, CRAC_PER_DC, NETWORK_PRICE, NODES_PER_DC
+from .topology import CRAC_MAX_W, CRAC_PER_DC, NETWORK_PRICE
 
 
 class EnvParams(NamedTuple):
@@ -184,7 +183,7 @@ def build_env(
         # demand origins: uniform across the DC regions (S = D). Routing only
         # matters once rtt is non-zero and origins are shifted; the default
         # reduces the routed model to the paper's exactly.
-        origin=jnp.full((num_dcs, num_tasks, 24), 1.0 / num_dcs),
+        origin=jnp.full((num_dcs, num_tasks, 24), 1.0 / num_dcs, dtype=jnp.float32),
     )
 
 

@@ -13,7 +13,7 @@ substrate (execution rates derived from the roofline analysis).
 from __future__ import annotations
 
 import dataclasses
-from typing import Dict, List, Tuple
+from typing import List, Tuple
 
 import numpy as np
 

@@ -20,7 +20,7 @@ from __future__ import annotations
 import contextlib
 import contextvars
 import re
-from typing import Any, Dict, Optional, Tuple
+from typing import Any, Optional, Tuple
 
 import jax
 import jax.numpy as jnp

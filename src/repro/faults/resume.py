@@ -27,7 +27,7 @@ from __future__ import annotations
 
 import contextlib
 import threading
-from typing import Any, Callable, Dict, Optional, Tuple
+from typing import Any, Callable, Dict, Optional
 
 import numpy as np
 
@@ -125,7 +125,7 @@ class SweepJournal:
             if extra.get("signature") != signature:
                 raise ValueError(
                     f"journal {directory!r} step {step} belongs to a "
-                    f"different sweep (signature "
+                    "different sweep (signature "
                     f"{extra.get('signature')!r} != {signature!r}); "
                     "point resume_dir at a fresh directory")
 

@@ -34,7 +34,7 @@ unfaulted numbers (bit-for-bit on the unrouted path).
 """
 from __future__ import annotations
 
-from typing import NamedTuple, Optional, Sequence, Union
+from typing import NamedTuple, Optional, Sequence
 
 import jax.numpy as jnp
 import numpy as np

@@ -11,7 +11,7 @@ behavior the Pallas kernel pair has on TPU.
 from __future__ import annotations
 
 import functools
-from typing import Optional, Tuple
+from typing import Optional
 
 import jax
 import jax.numpy as jnp

@@ -29,7 +29,6 @@ import traceback
 from typing import Any, Dict, Optional, Tuple
 
 import jax
-import jax.numpy as jnp
 from jax.sharding import NamedSharding, PartitionSpec as P
 
 from ..configs import SHAPES, ARCHS, get_config, input_specs, param_specs_struct

@@ -18,9 +18,8 @@ from the arch config).
 from __future__ import annotations
 
 import dataclasses
-import math
 import re
-from typing import Any, Dict, Optional, Tuple
+from typing import Any, Dict, Tuple
 
 # -- TPU v5e hardware constants (per assignment) ------------------------------
 PEAK_FLOPS = 197e12     # bf16 FLOP/s per chip

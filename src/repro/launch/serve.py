@@ -13,7 +13,7 @@ from __future__ import annotations
 import dataclasses
 import functools
 import time
-from typing import Any, Dict, List, Optional, Tuple
+from typing import Any, Dict, List, Tuple
 
 import jax
 import jax.numpy as jnp

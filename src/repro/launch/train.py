@@ -18,7 +18,6 @@ import time
 from typing import Any, Dict, Optional
 
 import jax
-import jax.numpy as jnp
 
 from ..checkpoint.manager import CheckpointManager
 from ..configs import get_config

@@ -1,0 +1,58 @@
+"""CLI driver: ``python -m repro.lint [--root DIR] [--check SLUG ...]``.
+
+Exit status 0 when clean, 1 when any violation is found (2 on usage
+errors, via argparse). Purely static — runs without jax installed.
+"""
+from __future__ import annotations
+
+import argparse
+import sys
+from typing import List
+
+from . import CHECKERS, lint_project
+from .project import Project, Violation
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(
+        prog="python -m repro.lint",
+        description="repo-native static analysis: trace purity, "
+                    "compile-key completeness, pytree contracts, tap "
+                    "registry")
+    ap.add_argument("--root", default=None,
+                    help="repo root to lint (default: this checkout)")
+    ap.add_argument("--check", action="append", choices=sorted(CHECKERS),
+                    metavar="SLUG", dest="checks",
+                    help="run only this checker (repeatable); default: all")
+    args = ap.parse_args(argv)
+
+    root = args.root or Project.default_root()
+    project = Project.load(root)
+    if not project.sources:
+        print(f"repro.lint: no sources found under {root}", file=sys.stderr)
+        return 2
+
+    violations: List[Violation]
+    if args.checks:
+        violations = list(project.parse_violations())
+        for slug in dict.fromkeys(args.checks):
+            violations.extend(CHECKERS[slug](project))
+        violations.extend(project.pragma_violations(include_stale=False))
+        violations.sort(key=lambda v: (v.path, v.line, v.check, v.message))
+    else:
+        violations = lint_project(project)
+
+    for v in violations:
+        print(v.render())
+    n_files = len(project.sources)
+    if violations:
+        print(f"repro.lint: {len(violations)} violation(s) in {n_files} "
+              "file(s) scanned", file=sys.stderr)
+        return 1
+    print(f"repro.lint: clean ({n_files} files, "
+          f"{len(args.checks or CHECKERS)} checkers)")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -1,0 +1,483 @@
+"""Trace-purity checker: host-side impurities reachable from jitted roots.
+
+PRs 6–8 each hand-rediscovered the same bug class: code that runs *at trace
+time* but depends on host state (a wall clock, a host RNG, a mutable module
+global) silently bakes one trace's snapshot into a cached compiled artifact
+— the program the cache replays is not the program the spec describes. This
+checker makes that a lint failure instead of a code-review catch.
+
+Mechanics: build a static call graph over the package's own source and walk
+it from the *jitted roots* — the functions whose bodies become traced
+programs:
+
+- ``repro.core.experiment._day_core`` (the engine scan bodies, including
+  the nested ``_body``/``day`` closures),
+- every registered technique step (the six builtin ``solve_epoch``s, plus
+  any function statically resolvable at a ``register_technique`` call
+  site),
+- the realized-fault execution path (``faults.failover.execute_hour``,
+  ``faults.guard.guard_fractions``),
+- the tap thunks (``game.tap_nash_residual``).
+
+A *unit* is one top-level function or method together with everything
+nested inside it (inner defs, lambdas, comprehensions) — closures passed to
+``lax.scan``/``vmap`` are traced with their parent, so they are analyzed
+with it too. Edges follow direct calls and bare references (callbacks) to
+functions resolvable through this package's imports; external pure targets
+(``jax.numpy`` etc.) terminate the walk.
+
+Flagged inside reachable units:
+
+==============================  ==========================================
+pattern                         why it poisons a trace
+==============================  ==========================================
+``time.time``/``perf_counter``  wall-clock constant-folded into the trace
+``np.random.*`` / ``random.*``  host RNG drawn once, frozen forever
+``.item()`` / ``float()`` /     host sync on a traced value (or a silent
+``int()`` / ``bool()``          trace-time constant-fold)
+``jax.debug.callback`` & co.    host callback — legitimate ONLY at the
+                                declared ``repro.obs`` escape hatches
+module-global mutation          retrace-dependent behavior: the artifact
+                                depends on *when* jit traced it
+``print`` / ``open`` /``input`` host I/O from traced code
+==============================  ==========================================
+
+Deliberate exceptions carry ``# lint: host-ok(reason)`` on the offending
+line (see ``project.Pragma``); the obs tap machinery's
+``jax.debug.callback`` is the canonical one.
+"""
+from __future__ import annotations
+
+import ast
+from typing import Dict, Iterable, List, Optional, Set, Tuple
+
+from .project import Project, Violation
+
+#: the declared jitted roots: (module, top-level function) pairs. Renaming
+#: one without updating this list is itself a lint failure (a silently
+#: missing root would un-check everything reachable from it).
+TRACED_ROOTS: Tuple[Tuple[str, str], ...] = (
+    ("repro.core.experiment", "_day_core"),
+    ("repro.core.game", "tap_nash_residual"),
+    ("repro.faults.failover", "execute_hour"),
+    ("repro.faults.guard", "guard_fractions"),
+    ("repro.core.force_directed", "solve_epoch"),
+    ("repro.core.genetic", "solve_epoch"),
+    ("repro.core.nash", "solve_epoch"),
+    ("repro.core.ddpg", "solve_epoch"),
+    ("repro.core.ppo_joint", "solve_epoch"),
+    ("repro.core.gt_drl", "solve_epoch"),
+)
+
+_HOST_CLOCKS = {
+    "time.time", "time.time_ns", "time.perf_counter",
+    "time.perf_counter_ns", "time.monotonic", "time.monotonic_ns",
+    "time.process_time", "datetime.datetime.now",
+    "datetime.datetime.utcnow", "datetime.date.today",
+}
+
+_HOST_CALLBACKS = {
+    "jax.debug.callback", "jax.debug.print", "jax.pure_callback",
+    "jax.experimental.io_callback", "jax.experimental.host_callback.call",
+}
+
+_HOST_IO = {"builtins.print", "builtins.open", "builtins.input"}
+
+_MUTATORS = {"append", "extend", "add", "update", "pop", "popitem",
+             "remove", "discard", "clear", "insert", "setdefault"}
+
+
+def _impure_call(dotted: str) -> Optional[str]:
+    """The violation message for a resolved dotted call name, or None."""
+    if dotted in _HOST_CLOCKS:
+        return (f"host clock `{dotted}` in traced code: the reading is "
+                "constant-folded into the cached artifact at trace time")
+    if dotted.startswith("numpy.random.") or dotted.startswith("random."):
+        return (f"host RNG `{dotted}` in traced code: drawn once at trace "
+                "time and frozen into every replay of the artifact")
+    if dotted in _HOST_CALLBACKS:
+        return (f"host callback `{dotted}` in traced code: only the "
+                "declared repro.obs escape hatches may do this "
+                "(# lint: host-ok(reason) if deliberate)")
+    if dotted in _HOST_IO:
+        return f"host I/O `{dotted}` in traced code"
+    return None
+
+
+# ---------------------------------------------------------------------------
+# per-module symbol tables
+# ---------------------------------------------------------------------------
+
+class ModuleTable:
+    """What one module's names mean: imports, functions, top-level state."""
+
+    def __init__(self, sf, package: str):
+        self.sf = sf
+        self.import_modules: Dict[str, str] = {}          # alias -> module fq
+        self.import_objects: Dict[str, Tuple[str, str]] = {}  # alias -> (mod, name)
+        self.functions: Dict[str, ast.AST] = {}           # top-level units
+        self.globals: Set[str] = set()                    # module-level state
+        if sf.tree is None:
+            return
+        for node in sf.tree.body:
+            self._top_level(node, package)
+        for cls in [n for n in sf.tree.body if isinstance(n, ast.ClassDef)]:
+            for node in cls.body:
+                if isinstance(node, (ast.FunctionDef, ast.AsyncFunctionDef)):
+                    self.functions[f"{cls.name}.{node.name}"] = node
+
+    def _top_level(self, node: ast.AST, package: str) -> None:
+        if isinstance(node, ast.Import):
+            for a in node.names:
+                self.import_modules[a.asname or a.name.split(".")[0]] = (
+                    a.name if a.asname else a.name.split(".")[0])
+        elif isinstance(node, ast.ImportFrom):
+            base = _resolve_from(package, node.level, node.module)
+            for a in node.names:
+                if a.name == "*":
+                    continue
+                self.import_objects[a.asname or a.name] = (base, a.name)
+        elif isinstance(node, (ast.FunctionDef, ast.AsyncFunctionDef)):
+            self.functions[node.name] = node
+        elif isinstance(node, ast.Assign):
+            for t in node.targets:
+                for n in ast.walk(t):
+                    if isinstance(n, ast.Name):
+                        self.globals.add(n.id)
+        elif isinstance(node, (ast.AnnAssign, ast.AugAssign)):
+            if isinstance(node.target, ast.Name):
+                self.globals.add(node.target.id)
+        elif isinstance(node, (ast.For, ast.With, ast.Try, ast.If)):
+            for sub in ast.iter_child_nodes(node):
+                self._top_level(sub, package)
+
+
+def _resolve_from(package: str, level: int, module: Optional[str]) -> str:
+    """Resolve a (possibly relative) ``from X import ...`` base module."""
+    if level == 0:
+        return module or ""
+    parts = package.split(".")
+    if level > 1:
+        parts = parts[: len(parts) - (level - 1)]
+    return ".".join(parts + ([module] if module else []))
+
+
+class Graph:
+    """Module tables + symbol resolution over one :class:`Project`."""
+
+    def __init__(self, project: Project):
+        self.project = project
+        self.tables: Dict[str, ModuleTable] = {}
+        for fq, sf in project.by_module.items():
+            package = fq if sf.relpath.endswith("__init__.py") else \
+                fq.rsplit(".", 1)[0] if "." in fq else ""
+            self.tables[fq] = ModuleTable(sf, package)
+
+    def resolve_symbol(self, module: str, name: str,
+                       _depth: int = 0) -> Optional[Tuple[str, str]]:
+        """Follow re-exports to the (module, function) that defines
+        ``name`` — or None when it lives outside the project."""
+        if _depth > 8:
+            return None
+        t = self.tables.get(module)
+        if t is None:
+            return None
+        if name in t.functions:
+            return (module, name)
+        if name in t.import_objects:
+            mod, orig = t.import_objects[name]
+            if mod in self.tables and orig not in self.tables.get(mod).functions \
+                    and f"{mod}.{orig}" in self.tables:
+                return None  # `from . import submod` — a module, not a func
+            return self.resolve_symbol(mod, orig, _depth + 1)
+        return None
+
+    def dotted_of(self, import_modules: Dict[str, str],
+                  import_objects: Dict[str, Tuple[str, str]], node: ast.AST,
+                  locals_: Set[str]) -> Optional[str]:
+        """Best-effort fully-qualified dotted name of a Name/Attribute
+        chain, resolving the base through the given import maps (module
+        imports merged with any function-level imports). External bases
+        resolve to their real module path (``np.random.default_rng``
+        -> ``numpy.random.default_rng``); unresolvable (locals, call
+        results) -> None."""
+        parts: List[str] = []
+        while isinstance(node, ast.Attribute):
+            parts.append(node.attr)
+            node = node.value
+        if not isinstance(node, ast.Name):
+            return None
+        base = node.id
+        parts.reverse()
+        if base in locals_:
+            return None
+        if base in import_modules:
+            return ".".join([import_modules[base]] + parts)
+        if base in import_objects:
+            mod, orig = import_objects[base]
+            # `from . import game` imports a submodule; `from .game import f`
+            # imports an object — both land in import_objects
+            sub = f"{mod}.{orig}" if mod else orig
+            if sub in self.tables or self.project.module(sub):
+                return ".".join([sub] + parts)
+            return ".".join([mod, orig] + parts) if mod else \
+                ".".join([orig] + parts)
+        if base in {"print", "open", "input", "float", "int", "bool"}:
+            return ".".join(["builtins", base] + parts)
+        return None
+
+
+# ---------------------------------------------------------------------------
+# unit analysis
+# ---------------------------------------------------------------------------
+
+def _unit_locals(fn: ast.AST) -> Set[str]:
+    """Every name bound inside the unit (params, assignments, loop targets,
+    comprehension vars, nested defs) — these shadow module symbols."""
+    names: Set[str] = set()
+    for node in ast.walk(fn):
+        if isinstance(node, (ast.FunctionDef, ast.AsyncFunctionDef)):
+            names.add(node.name)
+            a = node.args
+            for arg in (a.posonlyargs + a.args + a.kwonlyargs
+                        + ([a.vararg] if a.vararg else [])
+                        + ([a.kwarg] if a.kwarg else [])):
+                names.add(arg.arg)
+        elif isinstance(node, ast.Lambda):
+            a = node.args
+            for arg in a.posonlyargs + a.args + a.kwonlyargs:
+                names.add(arg.arg)
+        elif isinstance(node, ast.Name) and isinstance(node.ctx, ast.Store):
+            names.add(node.id)
+        elif isinstance(node, (ast.comprehension,)):
+            for n in ast.walk(node.target):
+                if isinstance(n, ast.Name):
+                    names.add(n.id)
+    return names
+
+
+def _cast_exempt(arg: ast.AST, shape_locals: frozenset = frozenset()) -> bool:
+    """float()/int()/bool() args that are trace-time legitimate: literals,
+    shape/axis arithmetic, len() of static structures, config fields."""
+    if isinstance(arg, ast.Constant):
+        return True
+    for node in ast.walk(arg):
+        # .shape/.ndim/... and shape-derived accessors (joint_shape(),
+        # state_shape()): static under jit by construction
+        if isinstance(node, ast.Attribute) and (
+                node.attr in {"ndim", "size", "dtype"}
+                or "shape" in node.attr):
+            return True
+        if isinstance(node, ast.Call) and isinstance(node.func, ast.Name) \
+                and node.func.id == "len":
+            return True
+        if isinstance(node, ast.Name) and node.id in shape_locals:
+            return True
+    return False
+
+
+def _shape_locals(fn: ast.AST) -> frozenset:
+    """Names assigned from shape-derived expressions within the unit
+    (``joint = ctx.joint_shape()``), one propagation level — enough for
+    the repo's ``int(np.prod(joint))`` idiom."""
+    out = set()
+    for node in ast.walk(fn):
+        if isinstance(node, ast.Assign) and _cast_exempt(node.value):
+            for t in node.targets:
+                if isinstance(t, ast.Name):
+                    out.add(t.id)
+    return frozenset(out)
+
+
+class UnitScan:
+    """One unit's outgoing edges + impurity findings."""
+
+    def __init__(self, graph: Graph, module: str, qualname: str,
+                 fn: ast.AST):
+        self.graph = graph
+        self.table = graph.tables[module]
+        self.module = module
+        self.qualname = qualname
+        self.fn = fn
+        self.locals = _unit_locals(fn)
+        self.shape_locals = _shape_locals(fn)
+        # module imports merged with function-level ones (the obs tap
+        # machinery does `import jax` inside the function body)
+        self.import_modules = dict(self.table.import_modules)
+        self.import_objects = dict(self.table.import_objects)
+        package = self.table.sf.module or ""
+        for node in ast.walk(fn):
+            if isinstance(node, ast.Import):
+                for a in node.names:
+                    self.import_modules[a.asname or a.name.split(".")[0]] = (
+                        a.name if a.asname else a.name.split(".")[0])
+            elif isinstance(node, ast.ImportFrom):
+                base = _resolve_from(package, node.level, node.module)
+                for a in node.names:
+                    if a.name != "*":
+                        self.import_objects[a.asname or a.name] = (base, a.name)
+        self.edges: Set[Tuple[str, str]] = set()
+        self.findings: List[Tuple[int, str]] = []   # (line, message)
+        self._scan()
+
+    def _dotted(self, node: ast.AST) -> Optional[str]:
+        return self.graph.dotted_of(self.import_modules, self.import_objects,
+                                    node, self.locals)
+
+    def _edge_for(self, node: ast.AST) -> None:
+        if isinstance(node, ast.Name):
+            if node.id in self.locals:
+                return
+            if node.id in self.table.functions:
+                self.edges.add((self.module, node.id))
+            elif node.id in self.import_objects:
+                tgt = self.graph.resolve_symbol(self.module, node.id)
+                if tgt:
+                    self.edges.add(tgt)
+        elif isinstance(node, ast.Attribute):
+            dotted = self._dotted(node)
+            if dotted and dotted.startswith(("repro.", "examples.",
+                                             "benchmarks.")):
+                mod, _, name = dotted.rpartition(".")
+                tgt = self.graph.resolve_symbol(mod, name)
+                if tgt:
+                    self.edges.add(tgt)
+
+    def _scan(self) -> None:
+        for node in ast.walk(self.fn):
+            if isinstance(node, ast.Call):
+                self._check_call(node)
+            elif isinstance(node, (ast.Name, ast.Attribute)) and \
+                    isinstance(getattr(node, "ctx", None), ast.Load):
+                self._edge_for(node)   # bare references: callbacks, partial()
+            elif isinstance(node, ast.Global):
+                self.findings.append((node.lineno, (
+                    "module-global mutation (`global "
+                    + ", ".join(node.names) + "`) in traced code: the "
+                    "artifact's behavior depends on when jit traced it")))
+            elif isinstance(node, (ast.Assign, ast.AugAssign)):
+                self._check_store(node)
+
+    def _check_call(self, node: ast.Call) -> None:
+        func = node.func
+        # .item() host-syncs no matter what the receiver resolves to
+        if isinstance(func, ast.Attribute) and func.attr == "item" \
+                and not node.args:
+            self.findings.append((node.lineno, (
+                "`.item()` in traced code: host sync on a traced value "
+                "(TracerConversionError at best, silent constant at worst)")))
+            return
+        # mutation of module-level containers
+        if isinstance(func, ast.Attribute) and func.attr in _MUTATORS \
+                and isinstance(func.value, ast.Name) \
+                and func.value.id not in self.locals \
+                and func.value.id in self.table.globals:
+            self.findings.append((node.lineno, (
+                f"mutates module global `{func.value.id}.{func.attr}(...)` "
+                "from traced code: retrace-dependent behavior")))
+            return
+        if isinstance(func, ast.Name) and func.id in {"float", "int", "bool"} \
+                and func.id not in self.locals:
+            if node.args and not _cast_exempt(node.args[0],
+                                              self.shape_locals):
+                self.findings.append((node.lineno, (
+                    f"`{func.id}()` on a possibly-traced value: host "
+                    "conversion — compute in jnp, or mark the line "
+                    "# lint: host-ok(reason) if the value is static")))
+            return
+        dotted = self._dotted(func)
+        if dotted:
+            msg = _impure_call(dotted)
+            if msg:
+                self.findings.append((node.lineno, msg))
+
+    def _check_store(self, node: ast.AST) -> None:
+        targets = node.targets if isinstance(node, ast.Assign) else [node.target]
+        for t in targets:
+            base = t
+            while isinstance(base, (ast.Attribute, ast.Subscript)):
+                base = base.value
+            if isinstance(base, ast.Name) and base.id not in self.locals \
+                    and base.id in self.table.globals and base is not t:
+                self.findings.append((node.lineno, (
+                    f"writes module global `{base.id}` from traced code: "
+                    "retrace-dependent behavior")))
+
+
+# ---------------------------------------------------------------------------
+# the checker
+# ---------------------------------------------------------------------------
+
+def _registered_step_roots(graph: Graph) -> Iterable[Tuple[str, str]]:
+    """Extra roots: functions statically resolvable at
+    ``register_technique(name, fn)`` / ``step=fn`` call sites, so external
+    solver registrations inside the package are walked without editing
+    ``TRACED_ROOTS``."""
+    for fq, table in graph.tables.items():
+        if table.sf.tree is None or not fq.startswith("repro."):
+            continue
+        for node in ast.walk(table.sf.tree):
+            if not (isinstance(node, ast.Call)
+                    and isinstance(node.func, (ast.Name, ast.Attribute))):
+                continue
+            name = (node.func.id if isinstance(node.func, ast.Name)
+                    else node.func.attr)
+            if name != "register_technique":
+                continue
+            cands = list(node.args[1:2]) + [
+                kw.value for kw in node.keywords
+                if kw.arg in ("step", "solve_epoch")]
+            for cand in cands:
+                if isinstance(cand, ast.Name):
+                    tgt = graph.resolve_symbol(fq, cand.id)
+                elif isinstance(cand, ast.Attribute):
+                    dotted = graph.dotted_of(table.import_modules,
+                                             table.import_objects, cand, set())
+                    if not dotted:
+                        continue
+                    mod, _, nm = dotted.rpartition(".")
+                    tgt = graph.resolve_symbol(mod, nm)
+                else:
+                    continue
+                if tgt:
+                    yield tgt
+
+
+def check(project: Project) -> List[Violation]:
+    graph = Graph(project)
+    out: List[Violation] = []
+
+    worklist: List[Tuple[str, str]] = []
+    for mod, name in TRACED_ROOTS:
+        table = graph.tables.get(mod)
+        if table is None or name not in table.functions:
+            out.append(Violation(
+                "src/repro/lint/purity.py", 1, "purity",
+                f"declared traced root `{mod}:{name}` not found — update "
+                "TRACED_ROOTS or restore the function (an unresolved root "
+                "silently un-checks everything reachable from it)"))
+            continue
+        worklist.append((mod, name))
+    worklist.extend(_registered_step_roots(graph))
+
+    seen: Set[Tuple[str, str]] = set()
+    while worklist:
+        mod, name = worklist.pop()
+        if (mod, name) in seen:
+            continue
+        seen.add((mod, name))
+        table = graph.tables.get(mod)
+        fn = table.functions.get(name) if table else None
+        if fn is None:
+            continue
+        scan = UnitScan(graph, mod, name, fn)
+        rel = table.sf.relpath
+        for line, msg in scan.findings:
+            pragma = project.pragma_at(rel, line, "host-ok")
+            if pragma is not None:
+                project.use_pragma(rel, line)
+                continue
+            out.append(Violation(rel, line, "purity",
+                                 f"{msg} [reached from `{mod}:{name}`]"))
+        worklist.extend(scan.edges)
+    return out

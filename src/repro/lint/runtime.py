@@ -1,0 +1,80 @@
+"""Runtime compile-count sanitizer, riding ``obs.cache_stats()``.
+
+The static checkers prove the compile *key* is complete; this module proves
+the *cache behaves*: a block of work builds exactly the artifacts it should
+and re-running it builds none. Two layers, because they catch different
+regressions:
+
+- :func:`expect_compiles` watches the repo's own accounting (``misses`` in
+  ``obs.cache_stats()``) — a miss delta above the expectation means a key
+  started forking (e.g. an unhashed config leaked into the tuple), below
+  means something is being served stale.
+- :func:`trace_count` asks **jax itself** how many times a spec's live
+  artifact has traced (``jit``'s internal cache size). The repo accounting
+  cannot see a silent retrace *inside* one artifact — e.g. a weak-typed
+  operand forking the jit cache under a single engine key — but the jit
+  cache can.
+
+Everything imports lazily so ``repro.lint``'s static side stays
+importable without jax.
+"""
+from __future__ import annotations
+
+from contextlib import contextmanager
+from typing import Iterator, Optional
+
+
+@contextmanager
+def expect_compiles(n: int, *, exact: bool = True) -> Iterator[dict]:
+    """Assert the block compiles exactly ``n`` new engine artifacts.
+
+    Yields a dict filled on exit with ``before``/``after`` stats and the
+    ``misses``/``hits`` deltas. Raises ``AssertionError`` on mismatch,
+    naming every engine key that missed inside the block so the forking
+    field is readable straight off the diff::
+
+        with lint.expect_compiles(1):
+            run(spec)            # first call: one build
+        with lint.expect_compiles(0):
+            run(spec)            # identical spec: pure cache hits
+    """
+    from repro import obs
+    before = obs.cache_stats()
+    info: dict = {"before": before}
+    yield info
+    after = obs.cache_stats()
+    info["after"] = after
+    info["misses"] = after["misses"] - before["misses"]
+    info["hits"] = after["hits"] - before["hits"]
+    ok = info["misses"] == n if exact else info["misses"] <= n
+    if not ok:
+        prev = {k: s["misses"] for k, s in before["engines"].items()}
+        fresh = [k for k, s in after["engines"].items()
+                 if s["misses"] > prev.get(k, 0)]
+        raise AssertionError(
+            f"expected {'exactly' if exact else 'at most'} {n} engine "
+            f"compile(s), saw {info['misses']} "
+            f"(hits {info['hits']}); keys that missed: {fresh or 'none'}")
+
+
+def trace_count(spec, *, shard: bool = False, faulted: bool = False,
+                fault_axis: bool = False) -> Optional[int]:
+    """How many programs jax has traced for this spec's live artifact.
+
+    Reaches through the dispatch instrumentation (``__wrapped__``) to the
+    underlying ``jax.jit`` wrapper and reads its cache size. A healthy
+    engine reports 1 after any number of identical ``run()`` calls; 2+
+    means an *intra-key* retrace the repo accounting cannot see (donated
+    buffer reuse, weak-type promotion, an unstable static arg). Returns
+    ``None`` when jax does not expose a cache-size probe (the caller
+    should skip, not fail: absence of the probe is not absence of the
+    bug).
+    """
+    from repro.core import experiment
+    fn = experiment.compiled_engine(spec, shard=shard, faulted=faulted,
+                                    fault_axis=fault_axis)
+    fn = getattr(fn, "__wrapped__", fn)
+    probe = getattr(fn, "_cache_size", None)
+    if probe is None:
+        return None
+    return int(probe())

@@ -8,13 +8,13 @@ GELU (Whisper convention).
 """
 from __future__ import annotations
 
-from typing import Any, Dict, List, Tuple
+from typing import Any, Dict, List
 
 import jax
 import jax.numpy as jnp
 
 from . import attention as attn
-from .layers import Params, apply_norm, dense_init, embed, embed_init, norm_init, sinusoidal_positions, unembed
+from .layers import (Params, apply_norm, embed, embed_init, norm_init, sinusoidal_positions, unembed)
 from .mlp import mlp_apply, mlp_init
 from .transformer import _attn_cache_init
 

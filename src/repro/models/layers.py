@@ -7,7 +7,7 @@ over nested-dict pytrees. No global state; dtype policy comes from the
 """
 from __future__ import annotations
 
-from typing import Any, Dict, Optional, Tuple
+from typing import Any, Dict, Tuple
 
 import jax
 import jax.numpy as jnp

@@ -18,7 +18,7 @@ the "model" axis (expert parallelism) when E divides it, else the ffn width.
 from __future__ import annotations
 
 import math
-from typing import Any, Dict, Optional, Tuple
+from typing import Tuple
 
 import jax
 import jax.numpy as jnp

@@ -11,7 +11,6 @@ Block layout (Griffin recurrent block): pre-norm → {gate branch: linear+GeLU}
 """
 from __future__ import annotations
 
-import math
 from typing import Any, Dict, Tuple
 
 import jax

@@ -9,7 +9,7 @@ depth and composes with `jax.checkpoint` for remat. Hybrid/SSM architectures
 from __future__ import annotations
 
 import functools
-from typing import Any, Dict, List, Optional, Tuple
+from typing import Any, Dict, List, Tuple
 
 import jax
 import jax.numpy as jnp

@@ -50,14 +50,14 @@ from .report import report, sparkline
 from .spans import (Span, cache_stats, engine_key_str, engine_stat,
                     note_bench, profile, reset_stats, span)
 from .spans import spans as all_spans
-from .tap import (TapBuffer, TapEvent, active_taps, capture, clear_events,
-                  disable_taps, enable_taps, enabled, events, ring, tap, taps,
-                  tracing)
+from .tap import (KNOWN_TAPS, TapBuffer, TapEvent, active_taps, capture,
+                  clear_events, disable_taps, enable_taps, enabled, events,
+                  ring, tap, taps, tracing)
 
 __all__ = [
     "tap", "taps", "capture", "events", "ring", "clear_events",
     "enable_taps", "disable_taps", "enabled", "active_taps", "tracing",
-    "TapBuffer", "TapEvent",
+    "KNOWN_TAPS", "TapBuffer", "TapEvent",
     "span", "all_spans", "Span", "cache_stats", "engine_stat",
     "engine_key_str", "reset_stats", "note_bench", "profile",
     "make_record", "write_record", "load_records", "run_info",

@@ -33,11 +33,22 @@ import collections
 import functools
 import threading
 from contextlib import contextmanager
-from typing import Any, Callable, Iterable, List, NamedTuple, Optional, Tuple
+from typing import Any, Callable, List, NamedTuple, Optional, Tuple
 
 import numpy as np
 
 DEFAULT_CAPACITY = 65536
+
+#: The tap registry: every name ever passed to ``tap(...)`` must be
+#: declared here, and ``repro.lint``'s taps checker enforces it statically
+#: (a typo'd name would otherwise compile to a tap that never fires).
+#: Keep sorted; keep literal — the lint pass reads this tuple from the AST.
+KNOWN_TAPS = (
+    "engine/hour",          # experiment engines: per-hour scan-body metrics
+    "game/nash_residual",   # game loop: best-reply residual probe
+    "gt_drl/ppo",           # GT-DRL: per-player PPO actor/critic losses
+    "gt_drl/round",         # GT-DRL: per-round best-response telemetry
+)
 
 
 class TapEvent(NamedTuple):
@@ -124,7 +135,7 @@ def _matches(name: str, patterns: frozenset) -> bool:
 
 def enabled(name: str) -> bool:
     """Trace-time liveness check for one tap name."""
-    return bool(_ACTIVE) and _matches(name, _ACTIVE)
+    return bool(_ACTIVE) and _matches(name, _ACTIVE)  # lint: host-ok(liveness is decided over the host-side active-pattern set at trace time, never over traced values)
 
 
 def enable_taps(*patterns: str) -> None:
@@ -209,7 +220,7 @@ def tap(name: str, value: Any = None, *, thunk: Optional[Callable] = None):
     import jax
     if thunk is not None:
         value = thunk()
-    jax.debug.callback(functools.partial(_record, name), value)
+    jax.debug.callback(functools.partial(_record, name), value)  # lint: host-ok(the sanctioned obs escape hatch: an opaque effect that ships values to the host ring; parity tests pin taps-on == taps-off)
 
 
 def events(name: Optional[str] = None) -> List[TapEvent]:

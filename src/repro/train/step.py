@@ -49,16 +49,16 @@ def _chunked_ce(table, hidden: jnp.ndarray, labels: jnp.ndarray) -> jnp.ndarray:
     l_chunks = labels.reshape(b, nc, chunk).swapaxes(0, 1)
 
     @jax.checkpoint  # recompute the (B,C,V) logits in backward: the fp32
-    def _chunk_nll(h, l):  # logits of all chunks must never be live at once
+    def _chunk_nll(h, lab):  # logits of all chunks must never be live at once
         logits = unembed(table, h).astype(jnp.float32)  # (B, C, V)
         logz = jax.nn.logsumexp(logits, axis=-1)
-        gold = jnp.take_along_axis(logits, jnp.maximum(l, 0)[..., None], axis=-1)[..., 0]
-        mask = (l >= 0).astype(jnp.float32)
+        gold = jnp.take_along_axis(logits, jnp.maximum(lab, 0)[..., None], axis=-1)[..., 0]
+        mask = (lab >= 0).astype(jnp.float32)
         return jnp.sum((logz - gold) * mask), jnp.sum(mask)
 
     def body(carry, inp):
-        h, l = inp
-        nll, cnt = _chunk_nll(h, l)
+        h, lab = inp
+        nll, cnt = _chunk_nll(h, lab)
         return (carry[0] + nll, carry[1] + cnt), None
 
     (tot, cnt), _ = jax.lax.scan(body, (jnp.zeros(()), jnp.zeros(())), (h_chunks, l_chunks))

@@ -7,6 +7,18 @@ assert "xla_force_host_platform_device_count" not in os.environ.get("XLA_FLAGS",
 
 sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
 
+import pytest
+
+
+@pytest.fixture
+def expect_compiles():
+    """The runtime compile-count sanitizer (``repro.lint``) as a fixture:
+    ``with expect_compiles(n): run(...)`` asserts the block builds exactly
+    ``n`` engine artifacts (and names the forking keys when it doesn't)."""
+    from repro import lint
+    return lint.expect_compiles
+
+
 # hypothesis is optional (see requirements-dev.txt); property tests fall back
 # to the deterministic sampler in tests/_hyp_compat.py when it is absent.
 try:

@@ -107,5 +107,5 @@ def test_param_counts_match_published():
 
     for arch, want in expect.items():
         tree = param_specs_struct(get_config(arch))
-        n = sum(math.prod(l.shape) for l in jax.tree_util.tree_leaves(tree))
+        n = sum(math.prod(leaf.shape) for leaf in jax.tree_util.tree_leaves(tree))
         assert abs(n - want) / want < 0.06, (arch, n, want)

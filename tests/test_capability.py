@@ -4,7 +4,6 @@ unit-consistent with the roofline (tokens/s/chip × J/token == dynamic W/chip;
 er monotone in node counts), the task-type axis ``I`` is fully data-driven
 (an I=6 llm env runs all six solvers on scan/batched/month), and per-point
 stacked FaultTraces reproduce their per-row single runs."""
-import dataclasses
 
 import numpy as np
 import pytest

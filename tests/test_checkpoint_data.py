@@ -1,11 +1,8 @@
 """Checkpoint manager + data pipeline: atomicity, determinism, elasticity."""
 import functools
-import json
 import os
-import shutil
 
 import jax
-import jax.numpy as jnp
 import numpy as np
 import pytest
 

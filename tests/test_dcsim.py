@@ -1,8 +1,6 @@
 """Property tests (hypothesis) for the datacenter environment invariants."""
-import jax
 import jax.numpy as jnp
 import numpy as np
-import pytest
 from _hyp_compat import given, st
 
 from repro.dcsim import env as E

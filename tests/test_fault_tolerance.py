@@ -1,10 +1,7 @@
 """Fault tolerance: supervisor restart loop, straggler detection, elastic
 restore, end-to-end train-loop crash/resume."""
-import functools
 
 import jax
-import jax.numpy as jnp
-import numpy as np
 import pytest
 
 from repro.checkpoint.manager import CheckpointManager

@@ -2,7 +2,6 @@
 graceful degradation, resumable sweeps (repro.faults)."""
 import json
 import os
-import shutil
 import time
 
 import numpy as np

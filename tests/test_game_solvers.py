@@ -1,10 +1,8 @@
 """Game formulation + all six solvers: constraints, equilibrium, ordering."""
-import dataclasses
 
 import jax
 import jax.numpy as jnp
 import numpy as np
-import pytest
 
 from repro.core import ddpg, force_directed, genetic, gt_drl, nash, ppo_joint
 from repro.core.game import (GameContext, cloud_objective, nash_residual,

@@ -2,17 +2,12 @@
 associative scan == stepwise recurrence; hypothesis sweeps on shapes."""
 import jax
 import jax.numpy as jnp
-import numpy as np
 import pytest
 from _hyp_compat import given, settings, st
 
 from repro.configs import get_config
-from repro.models.rglru import (rglru_apply, rglru_decode, rglru_init,
-                                rglru_scan, rglru_state_init)
-from repro.models.xlstm import (mlstm_parallel, mlstm_sequence, mlstm_step,
-                                mlstm_apply, mlstm_decode, mlstm_init,
-                                mlstm_state_init)
-
+from repro.models.rglru import (rglru_apply, rglru_decode, rglru_init, rglru_scan)
+from repro.models.xlstm import mlstm_parallel, mlstm_sequence, mlstm_step
 KEY = jax.random.PRNGKey(0)
 
 

@@ -3,7 +3,6 @@
 the engine's own per-epoch metrics), the compile-cache accounting tracks
 hits/misses/evictions, run records round-trip with full provenance, and the
 scoreboard renders from records alone."""
-import json
 import os
 
 import jax.numpy as jnp

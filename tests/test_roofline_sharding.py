@@ -1,10 +1,7 @@
 """Roofline extraction machinery + sharding rule unit tests."""
 from types import SimpleNamespace
 
-import jax
-import jax.numpy as jnp
 import numpy as np
-import pytest
 from jax.sharding import PartitionSpec as P
 
 from repro.launch import roofline

@@ -22,7 +22,7 @@ from repro import scenarios as S
 from repro.core import gt_drl
 from repro.core import schedulers as SCH
 from repro.core.force_directed import FDConfig
-from repro.core.game import GameContext, fractions_to_ar, uniform_fractions
+from repro.core.game import GameContext, fractions_to_ar
 from repro.core.nash import NashConfig
 from repro.core.ppo import PPOConfig
 from repro.dcsim import env as E

@@ -7,15 +7,17 @@ export PYTHONPATH := src$(if $(PYTHONPATH),:$(PYTHONPATH))
 
 # PYTEST_ARGS lets CI add plugins the container image lacks
 # (e.g. PYTEST_ARGS="--timeout=300" with pytest-timeout installed)
-check:
+check: lint
 	$(PY) -m pytest -x -q $(PYTEST_ARGS)
 
 # static analysis: the repo-native pass (trace purity, compile-key
-# completeness, pytree schemas, tap registry — see README "Static
-# analysis") plus ruff when available (pinned in requirements-dev.txt;
-# skipped, not failed, where it isn't installed)
+# completeness, pytree schemas, tap registry, units of measure, bounds
+# invariants — see README "Static analysis") plus ruff when available
+# (pinned in requirements-dev.txt; skipped, not failed, where it isn't
+# installed). LINT_FORMAT=github makes CI violations annotate PR lines.
+LINT_FORMAT ?= text
 lint:
-	$(PY) -m repro.lint
+	$(PY) -m repro.lint --format=$(LINT_FORMAT)
 	@if $(PY) -m ruff --version >/dev/null 2>&1; then \
 		$(PY) -m ruff check . ; \
 	else \

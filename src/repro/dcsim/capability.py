@@ -44,6 +44,7 @@ from typing import Callable, Dict, NamedTuple, Tuple, Union
 import numpy as np
 
 from . import colocation, latency, power, topology
+from ..units import BYTES_PER_FP32_TOKEN, BYTES_PER_GB, BYTES_PER_GIB, S_PER_H
 
 __all__ = [
     "CapabilityBundle", "WorkloadModel", "ServingProfile",
@@ -70,6 +71,17 @@ class CapabilityBundle(NamedTuple):
     meta            dict       model-specific extras (llm: tokens/s/chip,
                                J/token, batch, chips per instance, bottleneck)
     ==============  =========  ====================================================
+
+    Machine-read unit table (repro.lint.units):
+
+        task_names: -
+        er: task/h
+        it_idle: W
+        it_dyn: W
+        nn_total: node
+        sizes: GB/task
+        sla_ms: ms
+        meta: -
     """
 
     task_names: Tuple[str, ...]
@@ -139,7 +151,16 @@ class AIBenchWorkload(WorkloadModel):
 @dataclasses.dataclass(frozen=True)
 class ServingProfile:
     """Workload *statistics* for one served model family (request shapes —
-    not execution times; those are derived)."""
+    not execution times; those are derived).
+
+    Machine-read unit table (repro.lint.units):
+
+        arch: -
+        prompt_mean: token/task
+        output_mean: token/task
+        batch_target: 1
+        extra_payload_gb: GB/task
+    """
 
     arch: str              # configs/ model-zoo name
     prompt_mean: int       # mean prompt length, tokens
@@ -178,7 +199,7 @@ def _family_on_accel(profile: ServingProfile, acc: "topology.AccelType"):
     cfg = get_config(profile.arch)
     total_b = cfg.param_count() * _DTYPE_BYTES
     active = cfg.param_count(active_only=True)
-    hbm_b = acc.hbm_gb * 2.0 ** 30
+    hbm_b = acc.hbm_gb * BYTES_PER_GIB
 
     # chips per model instance: weights must fit in aggregate HBM
     n_chips = max(1, math.ceil(total_b / hbm_b))
@@ -220,7 +241,7 @@ def _family_on_accel(profile: ServingProfile, acc: "topology.AccelType"):
     prefill_s = max(2.0 * active * profile.prompt_mean / (n_chips * acc.peak_flops),
                     total_b / (n_chips * acc.hbm_bw))
     req_s = prefill_s + profile.output_mean * t_step / b   # per request
-    tasks_per_h_chip = 3600.0 / (req_s * n_chips)
+    tasks_per_h_chip = S_PER_H / (req_s * n_chips)
     tasks_per_h_node = tasks_per_h_chip * chips_per_node
 
     # energy attribution: a chip's dynamic draw divided by its token rate —
@@ -269,7 +290,8 @@ class LLMWorkload(WorkloadModel):
         dyn = np.array([acc.dyn_w for acc in accs])
         nn_total = nn.sum(axis=1).astype(float)
         sizes = np.array([
-            (p.prompt_mean + p.output_mean) * 4.0 / 1e9 + p.extra_payload_gb
+            (p.prompt_mean + p.output_mean) * BYTES_PER_FP32_TOKEN / BYTES_PER_GB
+            + p.extra_payload_gb
             for _, p in self.families])                  # ~4 B/token text
         sla_ms = latency.default_sla_ms(er, nn_total)
         return CapabilityBundle(

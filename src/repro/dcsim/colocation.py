@@ -15,6 +15,7 @@ from __future__ import annotations
 
 import numpy as np
 
+from ..units import S_PER_H
 from .topology import NODE_TYPES, NUM_XEON_TYPES, TASK_TYPES
 
 # interference slope per memory-intensity class (low, med, high):
@@ -69,4 +70,4 @@ def er_table(nn: np.ndarray) -> np.ndarray:
     cores = np.array([NODE_TYPES[j].cores for j in range(num_types)], float)
     per_node = coer * cores[None, :]  # (I, J) tasks/s per node
     er = per_node @ nn.T.astype(float)  # (I, D) tasks/s
-    return er * 3600.0
+    return er * S_PER_H

@@ -77,9 +77,43 @@ import numpy as np
 from . import capability, latency, renewables, topology
 from . import workload as _workload
 from .topology import CRAC_MAX_W, CRAC_PER_DC, NETWORK_PRICE
+from ..units import W_PER_KW
 
 
 class EnvParams(NamedTuple):
+    """Everything the simulator knows about the fleet, one hour-indexed
+    pytree. Shapes are pinned in ``repro.lint.pytrees.SCHEMAS``; the field
+    units below are the single source of truth for the dimensional
+    analysis — ``repro.lint.units`` parses this table and cross-checks it
+    against the field declarations, so doc drift is a lint failure.
+
+    Machine-read unit table (repro.lint.units):
+
+        er: task/h
+        it_idle: W
+        it_dyn: W
+        tsupply: degC
+        eff: 1
+        rp: W
+        carbon: kgCO2/kWh
+        eprice: USD/kWh
+        peak_price: USD/kW
+        alpha: 1
+        nprice: USD/GB
+        sizes: GB/task
+        nn_total: node
+        car: task/h
+        avail: 1
+        rtt: ms
+        sla_ms: ms
+        sla_price: USD/task
+        sla_weight: 1
+        origin: 1
+
+    (``peak_price`` is $/kW of monthly peak; the monthly billing period is
+    deliberately outside the dimension system — the peak delta is a one-off
+    $ charge within the hour it occurs.)
+    """
     er: jnp.ndarray          # (I, D) max execution rate, tasks/h (eq. 3)
     it_idle: jnp.ndarray     # (D,) W
     it_dyn: jnp.ndarray      # (D,) W at full utilization
@@ -327,7 +361,8 @@ def dp_max_t(env: EnvParams, tau) -> jnp.ndarray:
 
 def power_cop(env: EnvParams) -> jnp.ndarray:
     t = env.tsupply
-    return 0.0068 * t * t + 0.0008 * t + 0.458
+    # empirical CRAC COP fit: the coefficients absorb the degC units
+    return 0.0068 * t * t + 0.0008 * t + 0.458  # lint: unit-ok(empirical COP quadratic in supply degC)
 
 
 def load_share(env: EnvParams, ar: jnp.ndarray, tau) -> jnp.ndarray:
@@ -357,7 +392,7 @@ def dp_est(env: EnvParams, ar: jnp.ndarray, tau) -> jnp.ndarray:
 
 def cet_est(env: EnvParams, ar: jnp.ndarray, tau) -> jnp.ndarray:
     """CET[i] (eqs. 11–12): estimated cloud carbon per player, kg/h."""
-    de = env.carbon[:, tau][None, :] * dp_est(env, ar, tau) / 1000.0
+    de = env.carbon[:, tau][None, :] * dp_est(env, ar, tau) / W_PER_KW
     return jnp.sum(de, axis=1)
 
 
@@ -390,7 +425,7 @@ def peak_increase(env: EnvParams, ar: jnp.ndarray, tau, peak_state: jnp.ndarray)
     """Δ_peak[d] (eq. 6) in $, plus the updated monthly peak state (W)."""
     draw = jnp.maximum(grid_power(env, ar, tau), 0.0)
     new_peak = jnp.maximum(peak_state, draw)
-    delta = env.peak_price * (new_peak - peak_state) / 1000.0
+    delta = env.peak_price * (new_peak - peak_state) / W_PER_KW
     return delta, new_peak
 
 
@@ -407,9 +442,9 @@ def cct_est(env: EnvParams, ar: jnp.ndarray, tau, peak_state: jnp.ndarray) -> jn
     share = load_share(env, ar, tau)
     dpe = dp_est(env, ar, tau)
     a = jnp.where(dpe > 0, 1.0, env.alpha[None, :])
-    energy = env.eprice[:, tau][None, :] * a * dpe / 1000.0
+    energy = env.eprice[:, tau][None, :] * a * dpe / W_PER_KW
     delta, _ = peak_increase(env, ar, tau, peak_state)
-    dc = energy + delta[None, :] * share + nc_est(env, ar)
+    dc = energy + delta[None, :] * share + nc_est(env, ar)  # lint: unit-ok(peak delta is a one-off $ within the 1 h epoch, commensurable with $/h here)
     return jnp.sum(dc, axis=1)
 
 
@@ -587,9 +622,9 @@ def step_epoch(
     if ar3 is not None:
         ar = jnp.sum(ar3, axis=0)
     dp = grid_power(env, ar, tau)  # (D,) W, can be negative
-    de = env.carbon[:, tau] * dp / 1000.0  # kg/h (negative = displaced grid carbon)
+    de = env.carbon[:, tau] * dp / W_PER_KW  # kg/h (negative = displaced grid carbon)
     a = jnp.where(dp > 0, 1.0, env.alpha)
-    energy_cost = env.eprice[:, tau] * a * dp / 1000.0
+    energy_cost = env.eprice[:, tau] * a * dp / W_PER_KW
     delta, new_peak = peak_increase(env, ar, tau, peak_state)
     # $/GB × GB/task × tasks/h is already $/h (the seed divided by 1000 and
     # under-counted the detailed network bill 1000× vs the estimator)
@@ -602,7 +637,7 @@ def step_epoch(
         lat = latency_ms_routed(env, ar3, tau)  # (S, I, D) ms per path
         sla = jnp.sum(sla_cost_routed(env, ar3, tau, lat_ms=lat), axis=(0, 1))
         lat_mean = jnp.sum(ar3 * lat) / jnp.maximum(jnp.sum(ar3), 1e-9)
-    total_cost = energy_cost + delta + net_cost + sla
+    total_cost = energy_cost + delta + net_cost + sla  # lint: unit-ok(peak delta is a one-off $ within the 1 h epoch, commensurable with $/h here)
     viol = feasible_violation(env, ar, tau)
     rho = jnp.sum(ar / jnp.maximum(capacity_at(env, tau), 1e-9), axis=0)
     metrics = {

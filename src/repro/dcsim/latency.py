@@ -40,11 +40,12 @@ import jax.numpy as jnp
 import numpy as np
 
 from . import topology
+from ..units import MS_PER_H
 
-EARTH_RADIUS_KM = 6371.0
-FIBER_KM_PER_MS = 200.0    # signal speed in glass ≈ c / 1.5
+EARTH_RADIUS_KM = 6371.0    # lint: unit(km)
+FIBER_KM_PER_MS = 200.0    # signal speed in glass ≈ c/1.5  # lint: unit(km/ms)
 PATH_STRETCH = 1.4         # real fiber routes vs the great circle
-HOP_OVERHEAD_MS = 2.0      # per direction: serialization + routing + handoff
+HOP_OVERHEAD_MS = 2.0      # serialization + routing + handoff  # lint: unit(ms)
 RHO_MAX = 0.995            # queueing-factor utilization clip (keeps 1/(1-ρ) finite)
 SLA_SOFTNESS = 0.1         # sigmoid width as a fraction of the SLA target
 SLA_MARGIN = 4.0           # default SLA = margin × fleet-mean zero-load latency
@@ -107,7 +108,9 @@ def access_ms(rtt: jnp.ndarray) -> jnp.ndarray:
 
 def service_ms(er: jnp.ndarray, nn_total: jnp.ndarray) -> jnp.ndarray:
     """(I, D) zero-load service share per task: 3.6e6 · NN_d / ER[i, d]."""
-    return 3.6e6 * nn_total[None, :] / jnp.maximum(er, _EPS)
+    # ms/h * node / (task/h) reads as ms per request: node is a
+    # dimensionless server count in the M/M/c convention
+    return MS_PER_H * nn_total[None, :] / jnp.maximum(er, _EPS)  # lint: unit-ok(node is a dimensionless server count)
 
 
 def queue_factor(rho: jnp.ndarray) -> jnp.ndarray:
@@ -156,6 +159,6 @@ def default_sla_ms(er: np.ndarray, nn_total: np.ndarray,
     ≤60% utilization, so default envs (sla_price = 0 anyway) never bind."""
     er = np.asarray(er, float)
     nn_total = np.asarray(nn_total, float)
-    s = 3.6e6 * nn_total[None, :] / np.maximum(er, _EPS)
+    s = MS_PER_H * nn_total[None, :] / np.maximum(er, _EPS)
     w = er / np.maximum(er.sum(axis=1, keepdims=True), _EPS)
-    return margin * (s * w).sum(axis=1)
+    return margin * (s * w).sum(axis=1)  # lint: unit-ok(node count is dimensionless, as in service_ms)

@@ -15,7 +15,8 @@ from .topology import CRAC_MAX_W, NODE_TYPES
 def cop(t_supply_c: np.ndarray) -> np.ndarray:
     """HP CRAC coefficient-of-performance model."""
     t = np.asarray(t_supply_c, float)
-    return 0.0068 * t * t + 0.0008 * t + 0.458
+    # the empirical fit's coefficients absorb the degC units
+    return 0.0068 * t * t + 0.0008 * t + 0.458  # lint: unit-ok(empirical COP quadratic in supply degC)
 
 
 def node_power_arrays(num_node_types: int):

@@ -120,9 +120,9 @@ def dc_locations(num_dcs: int) -> List[int]:
 
 NODES_PER_DC = 4320  # paper §6
 AISLES_PER_DC = 4
-CRAC_PER_DC = 4
-CRAC_MAX_W = 120_000.0  # per CRAC unit rating
-NETWORK_PRICE = 0.085   # $/GB (AWS CloudFront-shaped)
+CRAC_PER_DC = 4         # CRAC units per DC  # lint: unit(1)
+CRAC_MAX_W = 120_000.0  # per CRAC unit rating  # lint: unit(W)
+NETWORK_PRICE = 0.085   # AWS CloudFront-shaped  # lint: unit(USD/GB)
 
 
 # ---------------------------------------------------------------------------
@@ -138,6 +138,19 @@ NETWORK_PRICE = 0.085   # $/GB (AWS CloudFront-shaped)
 
 @dataclasses.dataclass(frozen=True)
 class AccelType:
+    """One accelerator node type: per-chip roofline specs + node power.
+
+    Machine-read unit table (repro.lint.units):
+
+        name: -
+        chips: chip/node
+        peak_flops: FLOP/s
+        hbm_bw: B/s
+        hbm_gb: GiB
+        ici_bw: B/s
+        idle_w: W
+        dyn_w: W
+    """
     name: str
     chips: int          # chips per node (host)
     peak_flops: float   # per chip, bf16 FLOP/s

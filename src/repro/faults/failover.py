@@ -43,7 +43,7 @@ from .trace import FaultTrace
 POLICIES = ("renormalize", "spill_nearest", "drop")
 DEFAULT_POLICY = "renormalize"
 
-SPILL_RTT_SCALE_MS = 25.0   # nearness kernel scale for spill_nearest
+SPILL_RTT_SCALE_MS = 25.0   # nearness kernel scale for spill_nearest  # lint: unit(ms)
 REDISTRIBUTE_ROUNDS = 4     # water-fill rounds (project_feasible's budget)
 
 _EPS = 1e-9

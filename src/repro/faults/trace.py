@@ -43,6 +43,16 @@ HOURS = 24
 
 
 class FaultTrace(NamedTuple):
+    """Realized per-hour fault multipliers the executor applies to the
+    planning env (shapes pinned in ``repro.lint.pytrees.SCHEMAS``).
+
+    Machine-read unit table (repro.lint.units):
+
+        avail_mult: 1
+        rtt_extra_ms: ms
+        price_mult: 1
+        carbon_mult: 1
+    """
     avail_mult: jnp.ndarray    # (D, 24) in [0, 1]
     rtt_extra_ms: jnp.ndarray  # (D, D, 24) >= 0
     price_mult: jnp.ndarray    # (D, 24) > 0

@@ -21,10 +21,12 @@ import dataclasses
 import re
 from typing import Any, Dict, Tuple
 
+from ..units import BYTES_PER_GB
+
 # -- TPU v5e hardware constants (per assignment) ------------------------------
-PEAK_FLOPS = 197e12     # bf16 FLOP/s per chip
-HBM_BW = 819e9          # B/s per chip
-ICI_BW = 50e9           # B/s per link
+PEAK_FLOPS = 197e12     # bf16 per chip  # lint: unit(FLOP/s)
+HBM_BW = 819e9          # per chip  # lint: unit(B/s)
+ICI_BW = 50e9           # per link  # lint: unit(B/s)
 
 _DTYPE_BYTES = {
     "pred": 1, "s4": 1, "s8": 1, "u8": 1, "s16": 2, "u16": 2, "bf16": 2,
@@ -223,7 +225,7 @@ def analyze(
     if compiled is not None:
         try:
             ma = compiled.memory_analysis()
-            mem_gb = (ma.argument_size_in_bytes + ma.temp_size_in_bytes) / 1e9
+            mem_gb = (ma.argument_size_in_bytes + ma.temp_size_in_bytes) / BYTES_PER_GB
         except Exception:
             pass
 

@@ -1,6 +1,6 @@
 """``repro.lint`` — the repo's own static-analysis pass.
 
-Four static checkers over the codebase's load-bearing invariants, plus a
+Six static checkers over the codebase's load-bearing invariants, plus a
 runtime sanitizer:
 
 ==============  ============================================================
@@ -14,6 +14,13 @@ checker         invariant
 ``pytree``      ``EnvParams`` / ``FaultTrace`` / ``CapabilityBundle`` match
                 their declared shape schemas; construction is total
 ``taps``        every ``obs.tap("...")`` literal is a declared tap name
+``units``       units of measure propagate consistently through the
+                simulator core: no ``$/kWh + kg/kWh``, no bare magic scale
+                factors, ``_usd``/``_kg``/``_ms`` metric keys carry their
+                suffix unit, declared signatures/field tables hold
+``bounds``      traced divisions are guarded positive; routing tensors are
+                normalized along the declared simplex axis; nonnegativity
+                tables match the pytree schemas
 ``pragma``      suppressions are justified and still suppress something
 ==============  ============================================================
 
@@ -21,18 +28,20 @@ Run it: ``python -m repro.lint`` (or ``make lint``). The static side never
 imports the modules it checks — no jax required. Suppressions:
 ``# lint: host-ok(reason)`` on a deliberate host call in traced code,
 ``# lint: runtime-only(reason)`` on a spec field that only selects runtime
-inputs.
+inputs, ``# lint: unit(U)`` declaring a conversion constant's unit,
+``# lint: unit-ok(reason)`` on a deliberate unit/bounds escape.
 
 Runtime helpers (these do touch jax, lazily): :func:`validate` checks a
 live pytree against its schema (shape unification, float64/weak-type
-leaves); :func:`expect_compiles` / :func:`trace_count` pin compile counts
-in tests.
+leaves); :func:`validate_bounds` checks nonnegativity/simplex bounds;
+:func:`expect_compiles` / :func:`trace_count` pin compile counts in tests.
 """
 from __future__ import annotations
 
 from typing import List, Optional
 
-from . import compile_key, purity, pytrees, taps
+from . import bounds, compile_key, purity, pytrees, taps, units
+from .bounds import validate_bounds
 from .project import Pragma, Project, Violation
 from .pytrees import SCHEMAS, validate
 from .runtime import expect_compiles, trace_count
@@ -40,7 +49,7 @@ from .runtime import expect_compiles, trace_count
 __all__ = [
     "CHECKERS", "Pragma", "Project", "SCHEMAS", "Violation",
     "expect_compiles", "lint_project", "lint_repo", "trace_count",
-    "validate",
+    "validate", "validate_bounds",
 ]
 
 #: slug -> checker, in report order
@@ -49,6 +58,8 @@ CHECKERS = {
     "compile-key": compile_key.check,
     "pytree": pytrees.check,
     "taps": taps.check,
+    "units": units.check,
+    "bounds": bounds.check,
 }
 
 

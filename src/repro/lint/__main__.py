@@ -1,11 +1,18 @@
-"""CLI driver: ``python -m repro.lint [--root DIR] [--check SLUG ...]``.
+"""CLI driver: ``python -m repro.lint [--root DIR] [--check SLUG ...]
+[--format text|github|json]``.
 
 Exit status 0 when clean, 1 when any violation is found (2 on usage
 errors, via argparse). Purely static — runs without jax installed.
+
+Formats: ``text`` (the default ``path:line: [check] message``), ``github``
+(workflow commands — ``::error file=...,line=...::...`` — so CI violations
+annotate the offending PR lines), ``json`` (one object per violation, for
+tooling).
 """
 from __future__ import annotations
 
 import argparse
+import json
 import sys
 from typing import List
 
@@ -13,17 +20,35 @@ from . import CHECKERS, lint_project
 from .project import Project, Violation
 
 
+def _render_github(v: Violation) -> str:
+    # workflow commands eat raw newlines/%%; escape per the Actions spec
+    msg = (v.message.replace("%", "%25").replace("\r", "%0D")
+           .replace("\n", "%0A"))
+    return (f"::error file={v.path},line={v.line},"
+            f"title=repro.lint [{v.check}]::{msg}")
+
+
+def _render_json(violations: List[Violation]) -> str:
+    return json.dumps(
+        [{"path": v.path, "line": v.line, "check": v.check,
+          "message": v.message} for v in violations],
+        indent=2)
+
+
 def main(argv=None) -> int:
     ap = argparse.ArgumentParser(
         prog="python -m repro.lint",
         description="repo-native static analysis: trace purity, "
                     "compile-key completeness, pytree contracts, tap "
-                    "registry")
+                    "registry, units of measure, bounds invariants")
     ap.add_argument("--root", default=None,
                     help="repo root to lint (default: this checkout)")
     ap.add_argument("--check", action="append", choices=sorted(CHECKERS),
                     metavar="SLUG", dest="checks",
                     help="run only this checker (repeatable); default: all")
+    ap.add_argument("--format", choices=("text", "github", "json"),
+                    default="text", dest="fmt",
+                    help="violation output format (default: text)")
     args = ap.parse_args(argv)
 
     root = args.root or Project.default_root()
@@ -42,15 +67,19 @@ def main(argv=None) -> int:
     else:
         violations = lint_project(project)
 
-    for v in violations:
-        print(v.render())
+    if args.fmt == "json":
+        print(_render_json(violations))
+    else:
+        for v in violations:
+            print(_render_github(v) if args.fmt == "github" else v.render())
     n_files = len(project.sources)
     if violations:
         print(f"repro.lint: {len(violations)} violation(s) in {n_files} "
               "file(s) scanned", file=sys.stderr)
         return 1
-    print(f"repro.lint: clean ({n_files} files, "
-          f"{len(args.checks or CHECKERS)} checkers)")
+    if args.fmt != "json":
+        print(f"repro.lint: clean ({n_files} files, "
+              f"{len(args.checks or CHECKERS)} checkers)")
     return 0
 
 

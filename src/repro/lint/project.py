@@ -14,9 +14,12 @@ fooled by import-time state). Everything they share lives here:
   ``# lint: <directive>(<reason>)``. Directives: ``host-ok`` (this line's
   host-side call from traced code is deliberate — the ``jax.debug.callback``
   escape hatch), ``runtime-only`` (this ``ExperimentSpec`` field selects
-  runtime inputs, not the traced program). A pragma with an empty reason is
-  itself a violation, and a pragma that suppresses nothing is reported as
-  stale — suppressions cannot silently outlive their cause.
+  runtime inputs, not the traced program), ``unit`` (declares the unit of
+  the constant assigned on this line, e.g. ``# lint: unit(W/kW)`` — a
+  *declaration*, consumed by ``repro.lint.units``), ``unit-ok`` (this
+  line's unit finding is a deliberate escape). A pragma with an empty
+  reason is itself a violation, and a pragma that suppresses nothing is
+  reported as stale — suppressions cannot silently outlive their cause.
 - :class:`Violation` — one finding: ``path:line: [checker] message``.
 """
 from __future__ import annotations
@@ -30,7 +33,7 @@ from typing import Dict, List, NamedTuple, Optional
 
 PRAGMA_RE = re.compile(r"#\s*lint:\s*([a-z-]+)\s*\(([^)]*)\)")
 
-PRAGMA_DIRECTIVES = ("host-ok", "runtime-only")
+PRAGMA_DIRECTIVES = ("host-ok", "runtime-only", "unit", "unit-ok")
 
 
 class Violation(NamedTuple):

@@ -1,0 +1,23 @@
+"""Named unit-conversion constants — the only sanctioned scale factors.
+
+The simulator core mixes $/kWh prices with W of IT power, GB payloads with
+token counts, and ms latencies with tasks/h rates; PR 3 fixed three real
+bugs that were nothing but a scale factor applied (or dropped) in the wrong
+place. Every cross-unit conversion therefore goes through a constant below,
+each declared with its unit via ``# lint: unit(...)`` so
+``repro.lint.units`` can treat it as a *dimensioned* quantity: ``dp /
+W_PER_KW`` converts W → kW in the dimensional analysis, while a bare
+``dp / 1000.0`` is flagged as an undeclared magic scale factor.
+
+The values are bit-identical to the literals they replaced (pure renames;
+``2.0 ** 30`` folds to exactly 1073741824.0), so every engine output is
+unchanged — pinned by the parity tests in ``tests/test_units.py``.
+"""
+from __future__ import annotations
+
+W_PER_KW = 1000.0            # lint: unit(W/kW)
+MS_PER_H = 3.6e6             # lint: unit(ms/h)
+S_PER_H = 3600.0             # lint: unit(s/h)
+BYTES_PER_GB = 1e9           # lint: unit(B/GB)
+BYTES_PER_GIB = 2.0 ** 30    # lint: unit(B/GiB)
+BYTES_PER_FP32_TOKEN = 4.0   # lint: unit(B/token)

@@ -108,6 +108,66 @@ def test_stale_pragma_is_a_violation():
 
 
 # ---------------------------------------------------------------------------
+# seeded regressions: units & bounds
+# ---------------------------------------------------------------------------
+
+def test_unit_mismatched_add_trips_units():
+    # kgCO2/kWh + W: adding a grid intensity to a power draw
+    p = _seed("src/repro/dcsim/env.py",
+              "de = env.carbon[:, tau] * dp / W_PER_KW",
+              "de = (env.carbon[:, tau] + dp) / W_PER_KW")
+    assert _hits(p, "units", "unit mismatch")
+
+
+def test_undeclared_magic_factor_trips_units():
+    p = _seed("src/repro/dcsim/env.py",
+              "energy_cost = env.eprice[:, tau] * a * dp / W_PER_KW",
+              "energy_cost = env.eprice[:, tau] * a * dp / 1000.0")
+    assert _hits(p, "units", "magic scale factor")
+
+
+def test_dropped_conversion_trips_suffix_contract():
+    # dropping the W→kW conversion leaves carbon_kg carrying kgCO2·W/kWh
+    p = _seed("src/repro/dcsim/env.py",
+              "de = env.carbon[:, tau] * dp / W_PER_KW",
+              "de = env.carbon[:, tau] * dp")
+    assert _hits(p, "units", "`carbon_kg`")
+
+
+def test_usd_suffix_key_carrying_kg_trips_units():
+    p = _seed("src/repro/dcsim/env.py",
+              '"sla_miss_cost_usd": jnp.sum(sla),',
+              '"sla_miss_cost_usd": jnp.sum(de),')
+    assert _hits(p, "units", "`sla_miss_cost_usd`")
+
+
+def test_unit_table_drift_trips_units():
+    p = _seed("src/repro/dcsim/env.py",
+              "        eprice: USD/kWh\n", "")
+    assert _hits(p, "units", "drifted")
+
+
+def test_simplex_axis_flip_trips_bounds():
+    p = _seed("src/repro/faults/failover.py",
+              "w = w / jnp.maximum(jnp.sum(w, axis=-1, keepdims=True), _EPS)",
+              "w = w / jnp.maximum(jnp.sum(w, axis=0, keepdims=True), _EPS)")
+    assert _hits(p, "bounds", "axis")
+
+
+def test_unguarded_division_trips_bounds():
+    p = _seed("src/repro/dcsim/env.py",
+              "frac = ar / jnp.maximum(capacity_at(env, tau), 1e-9)",
+              "frac = ar / capacity_at(env, tau)")
+    assert _hits(p, "bounds", "not provably positive")
+
+
+def test_stale_unit_ok_pragma_is_a_violation():
+    p = PROJECT.overlay("src/repro/_seeded_pragma.py",
+                        "x = 1  # lint: unit-ok(nothing here needs it)\n")
+    assert _hits(p, "pragma", "stale pragma")
+
+
+# ---------------------------------------------------------------------------
 # compile-key behavior of the live spec (what the static checker guards)
 # ---------------------------------------------------------------------------
 

@@ -1,0 +1,146 @@
+"""Unit-identity tests: the named conversion constants are bit-identical to
+the literals they replaced, and the thin-coverage dcsim modules obey their
+dimensional contracts at runtime — COP/PUE dimensionless ratios, renewable
+W displacing grid W one-for-one, the llm path's W ≡ tok/s × J/tok identity,
+and payload GB rebuilt from token counts through the declared constants.
+"""
+import numpy as np
+import jax.numpy as jnp
+import pytest
+
+from repro import units as U
+from repro.dcsim import capability, colocation, power, renewables, topology
+from repro.dcsim import env as E
+from repro.lint import validate_bounds
+
+ENV = E.build_env(4, seed=0)
+
+
+# ---------------------------------------------------------------------------
+# the constants are pure renames: exact values pinned
+# ---------------------------------------------------------------------------
+
+def test_conversion_constants_are_bit_identical_to_the_old_literals():
+    assert U.W_PER_KW == 1000.0
+    assert U.MS_PER_H == 3.6e6
+    assert U.S_PER_H == 3600.0
+    assert U.BYTES_PER_GB == 1e9
+    assert U.BYTES_PER_GIB == 2.0 ** 30 == 1073741824.0
+    assert U.BYTES_PER_FP32_TOKEN == 4.0
+
+
+def test_er_table_matches_the_pre_rename_literal_expression():
+    nn = topology.node_mix(0, 4)
+    er = colocation.er_table(nn)
+    coer = colocation.coer_core(nn.shape[1])
+    cores = np.array([topology.NODE_TYPES[j].cores
+                      for j in range(nn.shape[1])], float)
+    expected = (coer * cores[None, :]) @ nn.T.astype(float) * 3600.0
+    np.testing.assert_array_equal(er, expected)
+
+
+def test_cet_est_matches_the_pre_rename_literal_expression():
+    ar = E.project_feasible(ENV, jnp.full((ENV.er.shape[0], 4), 0.25), 6)
+    got = E.cet_est(ENV, ar, 6)
+    expected = jnp.sum(
+        ENV.carbon[:, 6][None, :] * E.dp_est(ENV, ar, 6) / 1000.0, axis=1)
+    np.testing.assert_array_equal(np.asarray(got), np.asarray(expected))
+
+
+# ---------------------------------------------------------------------------
+# power: COP and PUE are dimensionless ratios
+# ---------------------------------------------------------------------------
+
+def test_cop_positive_and_env_power_cop_agrees():
+    t = np.asarray(ENV.tsupply)
+    c_host = power.cop(t)
+    c_env = np.asarray(E.power_cop(ENV))
+    np.testing.assert_allclose(c_host, c_env, rtol=1e-6)
+    assert (c_host > 0).all()
+
+
+def test_pue_is_a_dimensionless_ratio_at_least_one():
+    # PUE = (IT + CRAC)/IT = 1 + 1/COP: a pure ratio, invariant under any
+    # common rescaling of the power unit
+    it = np.asarray(ENV.it_idle + ENV.it_dyn)
+    crac = power.crac_power(it, np.asarray(ENV.tsupply))
+    pue = (it + np.minimum(crac, topology.CRAC_PER_DC * topology.CRAC_MAX_W)) / it
+    assert (pue >= 1.0).all()
+    it_kw = it / U.W_PER_KW
+    crac_kw = crac / U.W_PER_KW
+    np.testing.assert_allclose((it_kw + crac_kw) / it_kw, (it + crac) / it,
+                               rtol=1e-6)   # float32 leaves
+
+
+# ---------------------------------------------------------------------------
+# renewables: profile W displaces grid W one-for-one
+# ---------------------------------------------------------------------------
+
+def test_renewable_profile_units_match_grid_power_displacement():
+    tau = 12
+    dp = E.grid_power(ENV, jnp.zeros_like(ENV.er), tau)
+    dp0 = E.grid_power(ENV._replace(rp=jnp.zeros_like(ENV.rp)),
+                       jnp.zeros_like(ENV.er), tau)
+    # same unit (W) on both sides: removing the profile raises net draw by
+    # exactly rp[:, tau] (up to float32 rounding of the subtraction)
+    np.testing.assert_allclose(np.asarray(dp0 - dp),
+                               np.asarray(ENV.rp[:, tau]), rtol=1e-6)
+
+
+def test_renewable_profile_is_nonnegative_w():
+    rp = renewables.renewable_profile(
+        np.zeros(4), np.full(4, 0.5), np.full(4, 0.5),
+        installed_w=1e6, month=6, seed=0)
+    assert rp.shape == (4, 24)
+    assert (np.asarray(rp) >= 0).all()
+
+
+# ---------------------------------------------------------------------------
+# llm capability: W ≡ tok/s × J/tok, GB ≡ tokens × B/token
+# ---------------------------------------------------------------------------
+
+@pytest.fixture(scope="module")
+def llm_bundle():
+    wl = capability.get_workload("llm")
+    return wl, wl.capabilities(4, seed=0)
+
+
+def test_llm_w_equals_tokens_per_s_times_j_per_token(llm_bundle):
+    wl, bundle = llm_bundle
+    tok_s = bundle.meta["tokens_per_s_chip"]       # (I, A) token/s/chip
+    j_tok = bundle.meta["j_per_token"]             # (I, A) J/token
+    chips = np.array([a.chips for a in wl.accel_types], float)  # chip/node
+    # token/s/chip × J/token × chip/node == dynamic W/node, by construction
+    dyn_w = np.array([a.dyn_w for a in wl.accel_types])
+    np.testing.assert_allclose(tok_s * j_tok * chips[None, :],
+                               np.broadcast_to(dyn_w, tok_s.shape),
+                               rtol=1e-9)
+
+
+def test_llm_sizes_rebuild_from_token_counts(llm_bundle):
+    wl, bundle = llm_bundle
+    expected = np.array([
+        (p.prompt_mean + p.output_mean) * U.BYTES_PER_FP32_TOKEN
+        / U.BYTES_PER_GB + p.extra_payload_gb
+        for _, p in wl.families])
+    np.testing.assert_array_equal(bundle.sizes, expected)
+
+
+# ---------------------------------------------------------------------------
+# runtime bounds validation
+# ---------------------------------------------------------------------------
+
+def test_validate_bounds_green_on_default_env():
+    validate_bounds(ENV)
+
+
+def test_validate_bounds_flags_negative_price():
+    bad = ENV._replace(eprice=ENV.eprice - 100.0)
+    with pytest.raises(ValueError, match="eprice"):
+        validate_bounds(bad)
+
+
+def test_validate_bounds_flags_broken_origin_simplex():
+    bad = ENV._replace(origin=ENV.origin * 2.0)
+    with pytest.raises(ValueError, match="origin"):
+        validate_bounds(bad)
